@@ -1,0 +1,35 @@
+"""Shared benchmark helpers: wall-time and peak-memory measurement."""
+from __future__ import annotations
+
+import time
+import tracemalloc
+from typing import Callable
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
+
+
+def peak_memory(fn: Callable, *args, **kwargs):
+    """Peak python+numpy allocation during ``fn`` (numpy registers its
+    buffers with tracemalloc)."""
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    out = fn(*args, **kwargs)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, peak
+
+
+def emit(name: str, seconds: float, derived: str) -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def check_agree(a: dict, b: dict, what: str) -> None:
+    assert set(a) == set(b), f"{what}: group sets differ ({len(a)} vs {len(b)})"
+    for k, v in a.items():
+        assert abs(b[k] - v) <= 1e-6 * max(1.0, abs(v)), (what, k, v, b[k])

@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--scale paper`` uses the
+paper's 500k rows/relation (slow on 1 CPU); the default is
+container-friendly and preserves every selectivity ratio.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import tables
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "medium", "paper"], default="small")
+    ap.add_argument("--table", choices=["1", "2", "3", "4", "5", "6"], default=None)
+    ap.add_argument("--no-verify", action="store_true")
+    args = ap.parse_args()
+
+    n_self = {"small": 20000, "medium": 100000, "paper": 500000}[args.scale]
+    n_chain = {"small": 8000, "medium": 40000, "paper": 500000}[args.scale]
+    n_branch = {"small": 6000, "medium": 30000, "paper": 500000}[args.scale]
+    n_real = {"small": 20000, "medium": 100000, "paper": 500000}[args.scale]
+    verify = not args.no_verify and args.scale == "small"
+
+    print("name,us_per_call,derived")
+    run_all = args.table is None
+    if run_all or args.table == "1":
+        tables.table1_load(n_chain)
+    if run_all or args.table == "3":
+        tables.table3_selfjoin(n_self, verify)
+    if run_all or args.table == "4":
+        tables.table4_chain(n_chain, verify)
+    if run_all or args.table == "5":
+        tables.table5_branching(n_branch, verify)
+    if run_all or args.table == "6":
+        tables.table6_real(n_real, verify)
+    if run_all or args.table == "2":
+        tables.table2_memory(n_branch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""One benchmark per paper table.
+
+Table I   — dataset characteristics + data-graph load time
+Table II / Fig. 8 — peak memory, JOIN-AGG vs pre-aggregation (B2 samples)
+Table III — self-join S1–S3, JOIN-AGG vs traditional vs pre-agg
+Table IV  — chain C1–C3
+Table V   — branching B1–B3
+Table VI  — real-shaped queries (TPCH/DBLP/ORDS/IMDB)
+
+The 'PostgreSQL' column of the paper maps to the in-process traditional
+binary-join baseline; all engines are validated to agree on each run.
+"""
+from __future__ import annotations
+
+from repro.baselines.binary_join import binary_join_agg
+from repro.baselines.preagg import preagg_join_agg
+from repro.core.operator import join_agg
+from repro.core.prepare import prepare
+from repro.core.datagraph import build_data_graph
+from repro.data import synth
+from repro.data.queries import REAL
+
+from benchmarks.common import check_agree, emit, peak_memory, timed
+
+
+def _compare(tag: str, db, q, *, verify: bool, methods=("joinagg", "binary", "preagg")):
+    results = {}
+    if "joinagg" in methods:
+        res, t = timed(join_agg, q, db)
+        results["joinagg"] = res
+        emit(f"{tag},joinagg", t, f"groups={len(res)}")
+    if "binary" in methods:
+        (res, stats), t = timed(binary_join_agg, q, db)
+        results["binary"] = res
+        emit(
+            f"{tag},binary", t,
+            f"groups={len(res)};max_interm_rows={stats.max_intermediate_rows}",
+        )
+    if "preagg" in methods:
+        (res, stats), t = timed(preagg_join_agg, q, db)
+        results["preagg"] = res
+        emit(
+            f"{tag},preagg", t,
+            f"groups={len(res)};max_interm_rows={stats.max_intermediate_rows}",
+        )
+    if verify and "joinagg" in results:
+        for m, r in results.items():
+            if m != "joinagg":
+                check_agree(results["joinagg"], r, f"{tag}:{m}")
+
+
+def table1_load(n: int) -> None:
+    for name in synth.ALL:
+        db, q = synth.make(name, n)
+        prep, t_prep = timed(prepare, q, db)
+        g, t_graph = timed(build_data_graph, prep)
+        emit(
+            f"table1,{name},load", t_prep + t_graph,
+            f"rows={n};nodes={g.num_nodes};edges={g.num_edges};"
+            f"graph_mb={g.memory_bytes() / 1e6:.2f}",
+        )
+
+
+def table2_memory(n: int) -> None:
+    """B2 samples P1..P6: peak memory joinagg vs preagg (Fig. 8 / Table II)."""
+    sizes = [max(500, n // 16), n // 8, n // 4, n // 2, n]
+    for i, sz in enumerate(sizes, start=1):
+        db, q = synth.make("B2", sz)
+        res_j, mem_j = peak_memory(join_agg, q, db)
+        (res_p, stats), mem_p = peak_memory(preagg_join_agg, q, db)
+        check_agree(res_j, res_p, f"P{i}")
+        emit(
+            f"table2,P{i},joinagg_mem", 0.0,
+            f"rows={sz};peak_mb={mem_j / 1e6:.2f}",
+        )
+        emit(
+            f"table2,P{i},preagg_mem", 0.0,
+            f"rows={sz};peak_mb={mem_p / 1e6:.2f};"
+            f"max_interm_rows={stats.max_intermediate_rows}",
+        )
+
+
+def table3_selfjoin(n: int, verify: bool) -> None:
+    for name in synth.SELF_JOIN:
+        db, q = synth.make(name, n)
+        _compare(f"table3,{name}", db, q, verify=verify)
+
+
+def table4_chain(n: int, verify: bool) -> None:
+    for name in synth.CHAIN:
+        db, q = synth.make(name, n)
+        _compare(f"table4,{name}", db, q, verify=verify)
+
+
+def table5_branching(n: int, verify: bool) -> None:
+    for name in synth.BRANCH:
+        db, q = synth.make(name, n)
+        _compare(f"table5,{name}", db, q, verify=verify)
+
+
+def table6_real(n: int, verify: bool) -> None:
+    for name, gen in REAL.items():
+        db, q = gen(n)
+        _compare(f"table6,{name}", db, q, verify=verify)

@@ -1,0 +1,41 @@
+"""Paper query [Q2]: graph path-pattern counting via JOIN-AGG.
+
+    SELECT n1.label, n2.label, COUNT(*)
+    FROM Nodes n1, Edges e1, Edges e2, Nodes n2
+    WHERE n1.id = e1.src AND e1.dst = e2.src AND n2.id = e2.dst
+    GROUP BY n1.label, n2.label;
+
+Counts two-hop paths between label classes on a scale-free graph — the
+IMDB experiment shape (paper Table VI) where the traditional plan
+materializes billions of sub-paths and JOIN-AGG never does.
+
+    PYTHONPATH=src python examples/graph_pattern_counting.py
+"""
+import time
+
+import numpy as np
+
+from repro.baselines.binary_join import binary_join_agg
+from repro.core.operator import join_agg
+from repro.data.queries import imdb_like
+
+db, query = imdb_like(n=20_000, seed=1)
+
+t0 = time.perf_counter()
+res = join_agg(query, db)
+t_ja = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+res_b, stats = binary_join_agg(query, db)
+t_bin = time.perf_counter() - t0
+
+assert res == res_b
+paths = sum(res.values())
+top = sorted(res.items(), key=lambda kv: -kv[1])[:5]
+print(f"graph: {db['E1'].num_rows} edges; {paths:.3e} two-hop paths "
+      f"in {len(res)} label-pair groups")
+print(f"JOIN-AGG:    {t_ja:.3f}s (no intermediate materialization)")
+print(f"traditional: {t_bin:.3f}s (largest intermediate: "
+      f"{stats.max_intermediate_rows:,} rows)")
+print(f"speedup: {t_bin / t_ja:.1f}x")
+print("top label pairs:", [(f"{a}->{b}", int(c)) for (a, b), c in top])

@@ -1,0 +1,22 @@
+"""End-to-end LM training with the full substrate: the qwen2 family
+config scaled to ~30M params, a few hundred steps on the synthetic
+corpus, with checkpointing + preemption handling + straggler monitoring.
+The identical driver lowers onto the 256/512-chip production meshes
+(proven by launch/dryrun.py); device count only changes the mesh.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+sys.argv = [sys.argv[0],
+            "--arch", "qwen2-1.5b", "--reduced",
+            "--d-model", "384", "--n-layers", "12", "--vocab", "8192",
+            "--global-batch", "4", "--seq-len", "128",
+            "--steps", "300", "--ckpt-dir", "/tmp/repro_lm_ckpt",
+            "--log-every", "20",
+            ] + sys.argv[1:]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.aggregates.semiring import AggSpec, Count, Sum, Min, Max, Avg
+
+__all__ = ["AggSpec", "Count", "Sum", "Min", "Max", "Avg"]

@@ -1,0 +1,61 @@
+"""Aggregate specifications (paper Section IV-D).
+
+COUNT is the paper's running example; SUM/MIN/MAX/AVG generalize over the
+same data-graph/contraction machinery:
+
+* COUNT — contraction of edge multiplicities in the (+, x) semiring.
+* SUM(R.m) — identical contraction, with the *measure relation*'s edge
+  weight replaced by the per-edge sum of ``m`` (distributivity of + over x).
+* MIN/MAX(R.m) — boolean reachability on either side of the measure
+  relation, then a (min/max, select) reduction over its edges.
+* AVG — SUM and COUNT carried as a pair, divided at output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class AggSpec:
+    """Base class; ``measure`` = (relation, attribute) or None for COUNT."""
+
+    kind = "count"
+
+    @property
+    def measure(self) -> tuple[str, str] | None:
+        return None
+
+
+@dataclass(frozen=True)
+class Count(AggSpec):
+    kind = "count"
+
+
+@dataclass(frozen=True)
+class _Measured(AggSpec):
+    relation: str
+    attr: str
+
+    @property
+    def measure(self) -> tuple[str, str]:
+        return (self.relation, self.attr)
+
+
+@dataclass(frozen=True)
+class Sum(_Measured):
+    kind = "sum"
+
+
+@dataclass(frozen=True)
+class Min(_Measured):
+    kind = "min"
+
+
+@dataclass(frozen=True)
+class Max(_Measured):
+    kind = "max"
+
+
+@dataclass(frozen=True)
+class Avg(_Measured):
+    kind = "avg"

@@ -1,0 +1,4 @@
+from repro.baselines.binary_join import binary_join_agg
+from repro.baselines.preagg import preagg_join_agg
+
+__all__ = ["binary_join_agg", "preagg_join_agg"]

@@ -1,0 +1,5 @@
+# The paper's primary contribution: the multi-way JOIN-AGG operator.
+from repro.core.query import JoinAggQuery
+from repro.core.operator import join_agg
+
+__all__ = ["JoinAggQuery", "join_agg"]

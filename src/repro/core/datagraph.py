@@ -1,0 +1,142 @@
+"""The in-memory **data graph** (paper Sections III-C/D/E).
+
+Nodes are unique values (or multi-node value tuples) of each relation's
+``x_l``/``x_r`` attribute sets; intra-relation edges carry the pre-aggregated
+tuple *multiplicity*; inter-relation edges (multiplicity 1) connect a
+relation's *connector* nodes to each child relation's left nodes whenever
+their shared attribute values agree.  Stored CSR-style: a flat edge array
+plus per-node offset/degree, mirroring the paper's Section VI layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.prepare import Prepared
+
+SOURCE, INTERMEDIATE, BRANCHING, GROUP = 0, 1, 2, 3
+
+
+@dataclass
+class DataGraph:
+    prepared: Prepared
+    # node registry
+    node_rel: list[str] = field(default_factory=list)     # owning relation
+    node_side: list[str] = field(default_factory=list)    # "l" | "r"
+    node_vals: list[tuple[int, ...]] = field(default_factory=list)  # code tuple
+    node_type: list[int] = field(default_factory=list)
+    # adjacency (built as lists, frozen into CSR by freeze())
+    _adj: list[list[tuple[int, int]]] = field(default_factory=list)
+    sources: list[int] = field(default_factory=list)
+    # CSR arrays
+    edge_dst: np.ndarray | None = None
+    edge_mult: np.ndarray | None = None
+    offsets: np.ndarray | None = None
+
+    def add_node(self, rel: str, side: str, vals: tuple[int, ...], typ: int) -> int:
+        self.node_rel.append(rel)
+        self.node_side.append(side)
+        self.node_vals.append(vals)
+        self.node_type.append(typ)
+        self._adj.append([])
+        return len(self.node_rel) - 1
+
+    def add_edge(self, src: int, dst: int, mult: int) -> None:
+        self._adj[src].append((dst, mult))
+
+    def freeze(self) -> None:
+        degs = [len(a) for a in self._adj]
+        self.offsets = np.concatenate([[0], np.cumsum(degs)]).astype(np.int64)
+        flat = [e for a in self._adj for e in a]
+        self.edge_dst = np.array([d for d, _ in flat], dtype=np.int64)
+        self.edge_mult = np.array([m for _, m in flat], dtype=np.int64)
+
+    def out(self, n: int) -> list[tuple[int, int]]:
+        lo, hi = self.offsets[n], self.offsets[n + 1]
+        return list(zip(self.edge_dst[lo:hi].tolist(), self.edge_mult[lo:hi].tolist()))
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_rel)
+
+    @property
+    def num_edges(self) -> int:
+        return 0 if self.edge_dst is None else len(self.edge_dst)
+
+    def memory_bytes(self) -> int:
+        """Rough footprint of the frozen graph (nodes + CSR edges)."""
+        node_bytes = sum(8 * max(len(v), 1) + 24 for v in self.node_vals)
+        edge_bytes = 0 if self.edge_dst is None else (
+            self.edge_dst.nbytes + self.edge_mult.nbytes + self.offsets.nbytes
+        )
+        return node_bytes + edge_bytes
+
+
+def build_data_graph(prep: Prepared) -> DataGraph:
+    """Stage 1: load relations into the data graph (Section III-E)."""
+    deco = prep.decomposition
+    g = DataGraph(prep)
+
+    # node indices: (rel, side) -> {code tuple -> node id}
+    index: dict[tuple[str, str], dict[tuple[int, ...], int]] = {}
+
+    def node_of(rel: str, side: str, vals: tuple[int, ...], typ: int) -> int:
+        table = index.setdefault((rel, side), {})
+        nid = table.get(vals)
+        if nid is None:
+            nid = g.add_node(rel, side, vals, typ)
+            table[vals] = nid
+        return nid
+
+    def side_type(rel: str, side: str) -> int:
+        n = deco.nodes[rel]
+        if n.is_source and side == "l":
+            return SOURCE
+        if n.is_group and not n.is_source and side == "r":
+            return GROUP
+        connector_side = "l" if (n.is_group and not n.is_source) else "r"
+        if n.is_branching and side == connector_side:
+            return BRANCHING
+        return INTERMEDIATE
+
+    # --- intra-relation edges (multiplicity = pre-aggregated count) ---
+    for rel in deco.order:
+        node = deco.nodes[rel]
+        er = prep.encoded[rel]
+        li = [er.attrs.index(a) for a in node.x_l]
+        ri = [er.attrs.index(a) for a in node.x_r]
+        lt, rt = side_type(rel, "l"), side_type(rel, "r")
+        for row, cnt in zip(er.codes, er.count):
+            lvals = tuple(int(row[i]) for i in li)
+            rvals = tuple(int(row[i]) for i in ri)
+            nl = node_of(rel, "l", lvals, lt)
+            nr = node_of(rel, "r", rvals, rt)
+            g.add_edge(nl, nr, int(cnt))
+            if lt == SOURCE:
+                pass  # collected below from the registry
+
+    # --- inter-relation edges: parent connector -> child left (mult 1) ---
+    for rel in deco.order:
+        pnode = deco.nodes[rel]
+        pside = "l" if (pnode.is_group and not pnode.is_source) else "r"
+        pattrs = pnode.connector
+        ptable = index.get((rel, pside), {})
+        for child in pnode.children:
+            cnode = deco.nodes[child]
+            shared = tuple(a for a in cnode.x_l if a in pattrs)
+            ppos = [pattrs.index(a) for a in shared]
+            cpos = [cnode.x_l.index(a) for a in shared]
+            # bucket child left nodes by shared-attr projection
+            buckets: dict[tuple[int, ...], list[int]] = {}
+            for cvals, cid in index.get((child, "l"), {}).items():
+                key = tuple(cvals[i] for i in cpos)
+                buckets.setdefault(key, []).append(cid)
+            for pvals, pid_ in ptable.items():
+                key = tuple(pvals[i] for i in ppos)
+                for cid in buckets.get(key, ()):  # no match -> dead end
+                    g.add_edge(pid_, cid, 1)
+
+    g.sources = sorted(index.get((deco.root, "l"), {}).values())
+    g.freeze()
+    return g

@@ -1,0 +1,109 @@
+"""Public JOIN-AGG operator API (paper Section II-B).
+
+``join_agg(query, db)`` is the composite multi-way operator: it prepares
+the data-graph representation, picks an engine and a root cost-based (the
+paper's "the decision of whether to use the operator is made by the query
+optimizer in a cost-based manner" — here the decision *inside* the
+operator), and returns the aggregated groups directly — intermediate join
+results are never materialized.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.prepare import Prepared, prepare
+from repro.core.query import JoinAggQuery
+from repro.relational.relation import Database
+
+DEFAULT_MEMORY_BUDGET = 512 << 20  # bytes of message memory before streaming
+
+
+def estimate_plan(
+    query: JoinAggQuery, db: Database, root: str | None = None
+) -> tuple[Prepared, int]:
+    """Prepare + estimate peak message bytes for the tensor engine."""
+    prep = prepare(query, db, root=root)
+    deco = prep.decomposition
+
+    def subtree_gattrs(rel: str) -> list[str]:
+        out = []
+        g = prep.schema.group_of.get(rel)
+        if g:
+            out.append(g)
+        for c in deco.nodes[rel].children:
+            out.extend(subtree_gattrs(c))
+        return out
+
+    peak = 0
+    for rel in deco.order:
+        node = deco.nodes[rel]
+        if node.parent is None:
+            up: tuple[str, ...] = ()
+        else:
+            up = tuple(
+                set(prep.schema.relevant[rel])
+                & set(prep.schema.relevant[node.parent])
+            )
+        size = 8
+        for a in list(up) + subtree_gattrs(rel):
+            size *= prep.dicts[a].size
+        peak = max(peak, size)
+    return prep, peak
+
+
+def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
+    """Cost-based root choice: minimize estimated peak message memory.
+
+    Mirrors the paper's freedom to 'start from any group relation'
+    (Section III-A) made cost-based."""
+    best: tuple[Prepared, int] | None = None
+    group_rels = {r for r, _ in query.group_by}
+    for root in query.relations:
+        if root not in group_rels:
+            continue
+        try:
+            prep, peak = estimate_plan(query, db, root=root)
+        except ValueError:
+            continue
+        if best is None or peak < best[1]:
+            best = (prep, peak)
+    if best is None:
+        raise ValueError("no valid group-relation root")
+    return best
+
+
+def join_agg(
+    query: JoinAggQuery,
+    db: Database,
+    engine: str = "tensor",
+    memory_budget: int = DEFAULT_MEMORY_BUDGET,
+    stream: tuple[str, int] | None = None,
+) -> dict[tuple, float]:
+    """Execute a group-by aggregate over a multi-way acyclic join.
+
+    engine: "tensor" (TPU-native contraction, numpy backend),
+            "ref" (paper-faithful data-graph DFS), or
+            "jax" (jnp/einsum lowering of the tensor plan).
+    """
+    if engine == "ref":
+        from repro.core.ref_engine import execute_ref
+
+        prep = prepare(query, db)
+        return execute_ref(query, db, prep=prep)
+
+    prep, peak = choose_root(query, db)
+    if engine == "jax":
+        from repro.core.jax_engine import execute_jax
+
+        return execute_jax(query, db, prep=prep)
+
+    from repro.core.tensor_engine import execute_tensor
+
+    if stream is None and peak > memory_budget:
+        # stream over the largest group-attr domain to bound memory
+        attr = max((a for _, a in query.group_by), key=lambda a: prep.dicts[a].size)
+        dom = prep.dicts[attr].size
+        shrink = int(np.ceil(peak / memory_budget))
+        tile = max(1, dom // shrink)
+        stream = (attr, tile)
+    return execute_tensor(query, db, prep=prep, stream=stream)

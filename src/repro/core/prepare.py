@@ -1,0 +1,179 @@
+"""Stage-1 preparation shared by every engine (paper Sections II-B, III).
+
+``prepare()`` turns ``(query, database)`` into:
+
+1. a resolved :class:`QuerySchema` (join/group attrs, per-relation projections),
+2. shared per-attribute dictionaries (codes = data-graph node ids),
+3. pre-aggregated :class:`EncodedRelation`s (load-time pre-aggregation,
+   Section III-E — duplicate (x_l, x_r) tuples collapse into one edge with a
+   multiplicity),
+4. a leaf-multiplier fold rewrite (non-group leaf relations become weights
+   on their neighbor — a semi-join with counts), and
+5. the query decomposition tree with attribute splitting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.decomposition import Decomposition, decompose
+from repro.core.hypergraph import Hypergraph, build_hypergraph
+from repro.core.query import JoinAggQuery, QuerySchema, resolve_schema
+from repro.relational.encoding import (
+    Dictionary,
+    EncodedRelation,
+    build_dictionaries,
+    encode_relation,
+)
+from repro.relational.relation import Database
+
+
+@dataclass
+class Prepared:
+    query: JoinAggQuery
+    schema: QuerySchema
+    dicts: dict[str, Dictionary]
+    encoded: dict[str, EncodedRelation]
+    decomposition: Decomposition
+    folded: list[str]
+
+    @property
+    def group_attrs(self) -> tuple[tuple[str, str], ...]:
+        return self.schema.group_attrs
+
+    def domain(self, attr: str) -> int:
+        return self.dicts[attr].size
+
+
+def _ravel(codes: np.ndarray, cols: list[int], dims: list[int]) -> np.ndarray:
+    """Composite key over selected columns of a code matrix."""
+    if not cols:
+        return np.zeros(len(codes), dtype=np.int64)
+    return np.ravel_multi_index(
+        tuple(codes[:, c] for c in cols), dims=tuple(dims)
+    ).astype(np.int64)
+
+
+def _fold_leaf_multipliers(
+    schema: QuerySchema,
+    encoded: dict[str, EncodedRelation],
+    dicts: dict[str, Dictionary],
+    keep: set[str],
+) -> tuple[dict[str, EncodedRelation], list[str], dict[str, tuple[str, ...]]]:
+    """Fold non-group leaf relations into a neighbor as count weights.
+
+    A relation with no group attribute whose attrs are all contained in some
+    other relation's attrs is a pure multiplier/filter: joining it scales
+    each matching neighbor tuple by its match count (and drops non-matching
+    tuples — a semi-join).  Folding it pre-execution is the data-reduction
+    analogue of the paper's pre-aggregation, and guarantees every tree leaf
+    holds a group attribute (the paper's standing assumption).
+    """
+    relevant = {r: tuple(a) for r, a in schema.relevant.items()}
+    folded: list[str] = []
+    changed = True
+    while changed:
+        changed = False
+        for f in list(encoded):
+            if f in keep or f in schema.group_of:
+                continue
+            hosts = [
+                p for p in encoded
+                if p != f and set(relevant[f]) <= set(relevant[p])
+            ]
+            if not hosts:
+                continue
+            p = hosts[0]
+            ef, ep = encoded[f], encoded[p]
+            dims = [dicts[a].size for a in ef.attrs]
+            fkey = _ravel(ef.codes, list(range(len(ef.attrs))), dims)
+            pcols = [ep.attrs.index(a) for a in ef.attrs]
+            pkey = _ravel(ep.codes, pcols, dims)
+            order = np.argsort(fkey, kind="stable")
+            fk, fc = fkey[order], ef.count[order]
+            lo = np.searchsorted(fk, pkey, "left")
+            hi = np.searchsorted(fk, pkey, "right")
+            csum = np.concatenate([[0], np.cumsum(fc)])
+            factor = csum[hi] - csum[lo]
+            mask = factor > 0
+            encoded[p] = EncodedRelation(
+                ep.name,
+                ep.attrs,
+                ep.codes[mask],
+                ep.count[mask] * factor[mask],
+                {k: v[mask] * (factor[mask] if k == "sum" else 1)
+                 for k, v in ep.payloads.items()},
+            )
+            del encoded[f]
+            folded.append(f)
+            changed = True
+            # drop attrs that stopped being join attrs and re-aggregate
+            counts: dict[str, int] = {}
+            for r in encoded:
+                for a in relevant[r]:
+                    counts[a] = counts.get(a, 0) + 1
+            for r in list(encoded):
+                g = schema.group_of.get(r)
+                new_attrs = tuple(
+                    a for a in relevant[r] if a == g or counts.get(a, 0) >= 2
+                )
+                if new_attrs != relevant[r]:
+                    er = encoded[r]
+                    cols = [er.attrs.index(a) for a in new_attrs]
+                    sub = er.codes[:, cols]
+                    uniq, inv = np.unique(sub, axis=0, return_inverse=True)
+                    inv = inv.ravel()
+                    cnt = np.bincount(inv, weights=er.count, minlength=len(uniq))
+                    pay: dict[str, np.ndarray] = {}
+                    for k, v in er.payloads.items():
+                        if k == "sum":
+                            pay[k] = np.bincount(inv, weights=v, minlength=len(uniq))
+                        elif k == "min":
+                            arr = np.full(len(uniq), np.inf)
+                            np.minimum.at(arr, inv, v)
+                            pay[k] = arr
+                        else:
+                            arr = np.full(len(uniq), -np.inf)
+                            np.maximum.at(arr, inv, v)
+                            pay[k] = arr
+                    encoded[r] = EncodedRelation(
+                        er.name, new_attrs, uniq.astype(np.int64),
+                        cnt.astype(np.int64), pay,
+                    )
+                    relevant[r] = new_attrs
+            break
+    return encoded, folded, relevant
+
+
+def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepared:
+    schema = resolve_schema(query, db)
+    all_attrs = {a for attrs in schema.relevant.values() for a in attrs}
+    rels = [db[r] for r in query.relations]
+    dicts = build_dictionaries(rels, all_attrs)
+
+    measure = query.agg.measure
+    encoded: dict[str, EncodedRelation] = {}
+    for rname in query.relations:
+        m = measure[1] if (measure and measure[0] == rname) else None
+        encoded[rname] = encode_relation(db[rname], schema.relevant[rname], dicts, m)
+
+    keep = {measure[0]} if measure else set()
+    encoded, folded, relevant = _fold_leaf_multipliers(schema, encoded, dicts, keep)
+
+    if folded:
+        # re-resolve the schema over the surviving relations
+        schema = QuerySchema(
+            query=schema.query,
+            join_attrs=frozenset(
+                a for a in schema.join_attrs
+                if sum(a in relevant[r] for r in encoded) >= 2
+            ),
+            group_attrs=schema.group_attrs,
+            relevant={r: relevant[r] for r in encoded},
+            group_of=schema.group_of,
+        )
+
+    hg = Hypergraph({r: frozenset(relevant[r]) for r in encoded})
+    deco = decompose(schema, hg, root=root)
+    return Prepared(query, schema, dicts, encoded, deco, folded)

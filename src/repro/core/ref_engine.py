@@ -1,0 +1,186 @@
+"""Paper-faithful JOIN-AGG execution (Sections IV-A/B/C).
+
+Stage 2: a DFS from every source node propagates products of edge
+multiplicities; meeting a *branching* node pushes the running count into
+that path-id's count ``C_p`` and resets the running count (the paper's
+"caching effect": an already-seen path-id only accumulates ``C_p`` and is
+not re-explored).  Group sinks record c-pairs ``(path-id, count)``.
+
+Stage 3: c-pairs are bucketed per group relation and combined by a
+*prefix-join* on path-ids.  The paper's pairwise description is
+underspecified for sibling branches (two path-ids that agree on a common
+prefix but then diverge into different branching relations); we implement
+the combination recursively over the branching hierarchy — each resolved
+subtree multiplies its distinct path-id counts exactly once, which is the
+generalization of the paper's "multiply each unique path-id count once"
+rule and coincides with it on every query the paper evaluates.
+
+COUNT only (the paper's experiments); other aggregates run on the tensor
+engine (Section IV-D generalization).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.datagraph import BRANCHING, GROUP, DataGraph, build_data_graph
+from repro.core.prepare import Prepared, prepare
+from repro.core.query import JoinAggQuery
+from repro.relational.relation import Database
+
+Pid = tuple[int, ...]
+
+
+@dataclass
+class TraversalState:
+    """Everything one source node's DFS produced (Stage 2 output)."""
+
+    cpairs: dict[tuple[str, Pid], dict[int, float]]
+    path_counts: dict[Pid, float]
+    child_pids: dict[Pid, list[int]]  # pid -> branching node ids extending it
+
+
+def _traverse(g: DataGraph, source: int) -> TraversalState:
+    cpairs: dict[tuple[str, Pid], dict[int, float]] = defaultdict(lambda: defaultdict(float))
+    path_counts: dict[Pid, float] = {}
+    child_pids: dict[Pid, list[int]] = defaultdict(list)
+    node_type = g.node_type
+    node_rel = g.node_rel
+    node_vals = g.node_vals
+
+    # iterative DFS; stack entries: (node, pid, running count)
+    stack: list[tuple[int, Pid, float]] = [(source, (), 1.0)]
+    while stack:
+        n, pid, c = stack.pop()
+        for dst, mult in g.out(n):
+            c2 = c * mult
+            t = node_type[dst]
+            if t == GROUP:
+                gcode = node_vals[dst][0]
+                cpairs[(node_rel[dst], pid)][gcode] += c2
+            elif t == BRANCHING:
+                pid2 = pid + (dst,)
+                if pid2 in path_counts:
+                    path_counts[pid2] += c2  # cached: do not re-explore
+                else:
+                    path_counts[pid2] = c2
+                    child_pids[pid].append(dst)
+                    stack.append((dst, pid2, 1.0))
+            else:
+                stack.append((dst, pid, c2))
+    return TraversalState(
+        {k: dict(v) for k, v in cpairs.items()}, path_counts, dict(child_pids)
+    )
+
+
+def _combine(
+    g: DataGraph,
+    st: TraversalState,
+    branch_rel: str | None,
+    pid: Pid,
+) -> dict[tuple[int, ...], float] | None:
+    """Stage 3 prefix-join, recursive over the branching hierarchy.
+
+    Returns a map from group-code tuples (over the group relations in this
+    branching subtree, canonical order) to counts; None if any required
+    group relation is unreachable (no full rooted tree exists)."""
+    deco = g.prepared.decomposition
+    parts: list[tuple[list[str], dict[tuple[int, ...], float]]] = []
+
+    for grel in deco.direct_groups(branch_rel):
+        d = st.cpairs.get((grel, pid))
+        if not d:
+            return None
+        parts.append(([grel], {(k,): v for k, v in d.items()}))
+
+    for b2 in deco.child_branchings(branch_rel):
+        acc: dict[tuple[int, ...], float] = defaultdict(float)
+        rels: list[str] | None = None
+        for dst in st.child_pids.get(pid, ()):  # branching nodes extending pid
+            if g.node_rel[dst] != b2:
+                continue
+            pid2 = pid + (dst,)
+            sub = _combine(g, st, b2, pid2)
+            if sub is None:
+                continue
+            cp = st.path_counts[pid2]  # each unique path-id count used once
+            srels, sdict = sub
+            rels = srels
+            for k, v in sdict.items():
+                acc[k] += cp * v
+        if not acc:
+            return None
+        parts.append((rels, dict(acc)))
+
+    if not parts:
+        return None
+    rels, combined = parts[0]
+    for rels2, d2 in parts[1:]:
+        merged: dict[tuple[int, ...], float] = {}
+        for k1, v1 in combined.items():
+            for k2, v2 in d2.items():
+                merged[k1 + k2] = v1 * v2
+        rels, combined = rels + rels2, merged
+    return rels, combined
+
+
+def execute_ref(
+    query: JoinAggQuery, db: Database, prep: Prepared | None = None
+) -> dict[tuple, float]:
+    """Run the paper-faithful JOIN-AGG; returns {group values: count}."""
+    if query.agg.kind != "count":
+        raise NotImplementedError("ref engine implements COUNT (paper's experiments)")
+    if prep is None:
+        prep = prepare(query, db)
+    g = build_data_graph(prep)
+    deco = prep.decomposition
+    canonical = [r for r, _ in prep.group_attrs]
+
+    result: dict[tuple, float] = {}
+    root_gattr = prep.schema.group_of[deco.root]
+    root_dict = prep.dicts[root_gattr]
+
+    for s in g.sources:
+        st = _traverse(g, s)
+        src_code = g.node_vals[s][0]
+
+        others = [r for r in canonical if r != deco.root]
+        if not others:
+            # Degenerate single-group-relation query (everything else was
+            # folded): the count per source value is the product-sum over
+            # maximal paths — no branching/sink nodes exist here.
+            total = _count_terminal(g, s)
+            if total:
+                key_vals = (root_dict.decode(np.array([src_code]))[0],)
+                result[key_vals] = result.get(key_vals, 0.0) + total
+            continue
+
+        out = _combine(g, st, None, ())
+        if out is None:
+            continue
+        rels, combined = out
+        # reorder each key into canonical group order, prepend source value
+        for k, v in combined.items():
+            if v == 0:
+                continue
+            codes = {deco.root: src_code}
+            for r, c in zip(rels, k):
+                codes[r] = c
+            key = tuple(
+                prep.dicts[prep.schema.group_of[r]].decode(np.array([codes[r]]))[0]
+                for r in canonical
+            )
+            result[key] = result.get(key, 0.0) + v
+    return result
+
+
+def _count_terminal(g: DataGraph, s: int) -> float:
+    def walk(n: int, c: float) -> float:
+        outs = g.out(n)
+        if not outs:
+            return c
+        return sum(walk(d, c * m) for d, m in outs)
+
+    return walk(s, 1.0)

@@ -1,0 +1,355 @@
+"""TPU-native JOIN-AGG: decomposition-tree sum-product contraction.
+
+The data graph's edge multiplicities are sparse *multiplicity tensors*
+``T_r[attrs...] = #tuples``; the paper's traversal + prefix-join is a
+sum-product contraction of those tensors along the query decomposition
+tree with group attributes kept and join attributes contracted (see
+DESIGN.md §2).  Messages flow leaves -> root; each message's axes are the
+attrs shared with the parent plus every group attribute in the subtree —
+the exact analogue of the paper's c-pair lists, and the paper's path-id
+caching is subsumed by computing each subtree message once.
+
+This module is the exact numpy backend (int64/float64 counts) plus the
+source/group-axis *streaming* mode that reproduces the paper's bounded-
+memory per-source iteration.  ``jax_engine.py`` lowers the same plan to
+jnp/einsum + Pallas kernels for the TPU target.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.prepare import Prepared, prepare
+from repro.core.query import JoinAggQuery
+from repro.relational.relation import Database
+
+ROW_BLOCK = 65536  # rows contracted per scatter block (memory bound)
+
+
+@dataclass
+class Message:
+    attrs: tuple[str, ...]  # shared-with-parent attrs, then group attrs
+    num_shared: int
+    array: np.ndarray  # shape = domains(attrs)
+
+    @property
+    def group_attrs(self) -> tuple[str, ...]:
+        return self.attrs[self.num_shared:]
+
+
+def _segment_sum(keys: np.ndarray, vals: np.ndarray, num: int) -> np.ndarray:
+    """Sum rows of ``vals`` (n, d) into ``num`` buckets by ``keys`` (n,)."""
+    out = np.zeros((num,) + vals.shape[1:], dtype=vals.dtype)
+    if len(keys) == 0:
+        return out
+    order = np.argsort(keys, kind="stable")
+    keys_s, vals_s = keys[order], vals[order]
+    bounds = np.flatnonzero(np.concatenate([[True], keys_s[1:] != keys_s[:-1]]))
+    sums = np.add.reduceat(vals_s, bounds, axis=0)
+    out[keys_s[bounds]] = sums
+    return out
+
+
+def _tree_children(prep: Prepared) -> dict[str, list[str]]:
+    return {r: list(prep.decomposition.nodes[r].children) for r in prep.encoded}
+
+
+class TensorEngine:
+    def __init__(
+        self,
+        prep: Prepared,
+        weights_override: dict[str, np.ndarray] | None = None,
+        boolean: bool = False,
+        domains: dict[str, int] | None = None,
+        encoded=None,
+    ):
+        self.prep = prep
+        self.deco = prep.decomposition
+        self.encoded = encoded if encoded is not None else prep.encoded
+        self.domains = domains or {a: prep.dicts[a].size for a in prep.dicts}
+        self.weights_override = weights_override or {}
+        self.boolean = boolean
+        # canonical group-attr order = query group-by order
+        self.canonical = [attr for _, attr in prep.group_attrs]
+        self.peak_message_bytes = 0
+
+    # --- per-node weight vector (semiring payload) ---
+    def _weights(self, rel: str) -> np.ndarray:
+        if rel in self.weights_override:
+            return self.weights_override[rel]
+        w = self.encoded[rel].count.astype(np.float64)
+        if self.boolean:
+            w = (w > 0).astype(np.float64)
+        return w
+
+    def _dims(self, attrs: tuple[str, ...]) -> tuple[int, ...]:
+        return tuple(self.domains[a] for a in attrs)
+
+    def _canon_sort(self, gattrs: list[str]) -> list[str]:
+        return sorted(gattrs, key=self.canonical.index)
+
+    def message(self, rel: str, parent: str | None) -> Message:
+        """Compute the upward message of ``rel``'s subtree."""
+        er = self.encoded[rel]
+        node = self.deco.nodes[rel]
+        n = er.num_rows
+        vals = self._weights(rel).reshape(n, 1)
+
+        child_gattrs: list[str] = []
+        for child in node.children:
+            msg = self.message(child, rel)
+            shared = msg.attrs[: msg.num_shared]
+            pos = [er.attrs.index(a) for a in shared]
+            sh_dims = self._dims(shared)
+            g_dims = self._dims(msg.group_attrs)
+            m2 = msg.array.reshape(
+                int(np.prod(sh_dims, dtype=np.int64)) if sh_dims else 1,
+                int(np.prod(g_dims, dtype=np.int64)) if g_dims else 1,
+            )
+            if pos:
+                idx = np.ravel_multi_index(
+                    tuple(er.codes[:, p] for p in pos), dims=sh_dims
+                )
+            else:
+                idx = np.zeros(n, dtype=np.int64)
+            rows = m2[idx]  # (n, Gc)
+            vals = (vals[:, :, None] * rows[:, None, :]).reshape(n, -1)
+            child_gattrs.extend(msg.group_attrs)
+
+        own_g = self.prep.schema.group_of.get(rel)
+        up_attrs: tuple[str, ...]
+        if parent is None:
+            up_attrs = ()
+        else:
+            up_attrs = tuple(
+                sorted(set(er.attrs) & set(self.encoded[parent].attrs))
+            )
+        kept_own = up_attrs + ((own_g,) if own_g else ())
+        kept_dims = self._dims(kept_own)
+        kpos = [er.attrs.index(a) for a in kept_own]
+        if kpos:
+            keys = np.ravel_multi_index(
+                tuple(er.codes[:, p] for p in kpos), dims=kept_dims
+            )
+        else:
+            keys = np.zeros(n, dtype=np.int64)
+        knum = int(np.prod(kept_dims, dtype=np.int64)) if kept_dims else 1
+        out2 = _segment_sum(keys.astype(np.int64), vals, knum)
+        if self.boolean:
+            out2 = (out2 > 0).astype(np.float64)
+
+        # assemble axes: up_attrs, then group attrs in canonical order
+        gattrs = ([own_g] if own_g else []) + child_gattrs
+        raw_attrs = list(kept_own) + child_gattrs
+        arr = out2.reshape(kept_dims + self._dims(tuple(child_gattrs)))
+        want_g = self._canon_sort(gattrs)
+        want = list(up_attrs) + want_g
+        perm = [raw_attrs.index(a) for a in want]
+        arr = np.transpose(arr, perm) if perm != list(range(len(perm))) else arr
+        self.peak_message_bytes = max(self.peak_message_bytes, arr.nbytes)
+        return Message(tuple(want), len(up_attrs), arr)
+
+    def run(self) -> np.ndarray:
+        """Dense result tensor over canonical group axes."""
+        msg = self.message(self.deco.root, None)
+        assert msg.attrs == tuple(self.canonical), (msg.attrs, self.canonical)
+        return msg.array
+
+
+def _decode_result(
+    prep: Prepared, arr: np.ndarray, offsets: dict[str, int] | None = None
+) -> dict[tuple, float]:
+    nz = np.nonzero(arr)
+    vals = arr[nz]
+    out: dict[tuple, float] = {}
+    cols = []
+    for (rel, attr), codes in zip(prep.group_attrs, nz):
+        off = (offsets or {}).get(attr, 0)
+        cols.append(prep.dicts[attr].decode(codes + off))
+    for i, v in enumerate(vals):
+        out[tuple(c[i] for c in cols)] = float(v)
+    return out
+
+
+def _restrict(prep: Prepared, attr: str, lo: int, hi: int):
+    """Encoded relations filtered to ``attr`` codes in [lo, hi), re-based."""
+    enc = {}
+    for rel, er in prep.encoded.items():
+        if attr in er.attrs:
+            c = er.attrs.index(attr)
+            mask = (er.codes[:, c] >= lo) & (er.codes[:, c] < hi)
+            codes = er.codes[mask].copy()
+            codes[:, c] -= lo
+            enc[rel] = type(er)(
+                er.name, er.attrs, codes, er.count[mask],
+                {k: v[mask] for k, v in er.payloads.items()},
+            )
+        else:
+            enc[rel] = er
+    return enc
+
+
+def execute_tensor(
+    query: JoinAggQuery,
+    db: Database,
+    prep: Prepared | None = None,
+    stream: tuple[str, int] | None = None,
+) -> dict[tuple, float]:
+    """Execute on the numpy backend; returns {group values: aggregate}."""
+    if prep is None:
+        prep = prepare(query, db)
+    kind = query.agg.kind
+
+    def run_once(encoded, domains, offsets) -> dict[tuple, float]:
+        if kind in ("count", "sum"):
+            w_over = {}
+            if kind == "sum":
+                rel = query.agg.measure[0]
+                w_over[rel] = encoded[rel].payloads["sum"].astype(np.float64)
+            eng = TensorEngine(prep, w_over, domains=domains, encoded=encoded)
+            return _decode_result(prep, eng.run(), offsets)
+        if kind == "avg":
+            rel = query.agg.measure[0]
+            sums = TensorEngine(
+                prep, {rel: encoded[rel].payloads["sum"].astype(np.float64)},
+                domains=domains, encoded=encoded,
+            ).run()
+            cnts = TensorEngine(prep, domains=domains, encoded=encoded).run()
+            with np.errstate(invalid="ignore", divide="ignore"):
+                avg = np.where(cnts > 0, sums / np.maximum(cnts, 1), 0.0)
+            return _decode_result(prep, avg, offsets)
+        if kind in ("min", "max"):
+            return _minmax(query, prep, encoded, domains, offsets)
+        raise ValueError(kind)
+
+    if stream is None:
+        return run_once(prep.encoded, None, None)
+
+    attr, tile = stream
+    total = prep.dicts[attr].size
+    result: dict[tuple, float] = {}
+    for lo in range(0, total, tile):
+        hi = min(lo + tile, total)
+        enc = _restrict(prep, attr, lo, hi)
+        domains = {a: prep.dicts[a].size for a in prep.dicts}
+        domains[attr] = hi - lo
+        result.update(run_once(enc, domains, {attr: lo}))
+    return result
+
+
+def _minmax(query, prep, encoded, domains, offsets) -> dict[tuple, float]:
+    """MIN/MAX(R.m): boolean reachability messages from every subtree, then
+    a (min/max, select) reduction over the measure relation's edges.
+
+    The measure relation must be the decomposition root for a single upward
+    pass; when it is not, we exploit that MIN/MAX ignore multiplicities and
+    re-prepare with the measure relation's *own* group attr... the general
+    case re-roots the tree at the measure relation (any root is valid for
+    the contraction; the paper's group-relation-root rule only matters for
+    its DFS anchoring)."""
+    rel_m, attr_m = query.agg.measure
+    is_min = query.agg.kind == "min"
+    # re-root the tree at the measure relation
+    from repro.core.decomposition import decompose
+    from repro.core.hypergraph import Hypergraph
+
+    hg = Hypergraph({r: frozenset(prep.schema.relevant[r]) for r in encoded})
+    # decompose() requires a group-relation root; temporarily bless rel_m.
+    deco = _decompose_any_root(prep, hg, rel_m)
+
+    eng = TensorEngine(prep, boolean=True, domains=domains, encoded=encoded)
+    eng.deco = deco
+
+    er = encoded[rel_m]
+    n = er.num_rows
+    m = er.payloads["min" if is_min else "max"].astype(np.float64)
+    node = deco.nodes[rel_m]
+    reach = np.ones((n, 1))
+    child_gattrs: list[str] = []
+    for child in node.children:
+        msg = eng.message(child, rel_m)
+        shared = msg.attrs[: msg.num_shared]
+        pos = [er.attrs.index(a) for a in shared]
+        sh_dims = eng._dims(shared)
+        g_dims = eng._dims(msg.group_attrs)
+        m2 = msg.array.reshape(
+            int(np.prod(sh_dims, dtype=np.int64)) if sh_dims else 1,
+            int(np.prod(g_dims, dtype=np.int64)) if g_dims else 1,
+        )
+        idx = (
+            np.ravel_multi_index(tuple(er.codes[:, p] for p in pos), dims=sh_dims)
+            if pos else np.zeros(n, dtype=np.int64)
+        )
+        rows = m2[idx]
+        reach = (reach[:, :, None] * rows[:, None, :]).reshape(n, -1)
+        child_gattrs.extend(msg.group_attrs)
+
+    own_g = prep.schema.group_of.get(rel_m)
+    kept = (own_g,) if own_g else ()
+    kdims = eng._dims(kept)
+    if kept:
+        keys = er.codes[:, er.attrs.index(own_g)].astype(np.int64)
+    else:
+        keys = np.zeros(n, dtype=np.int64)
+    knum = int(np.prod(kdims, dtype=np.int64)) if kdims else 1
+
+    bad = np.inf if is_min else -np.inf
+    cand = np.where(reach > 0, m[:, None], bad)  # (n, G)
+    out = np.full((knum, cand.shape[1]), bad)
+    if n:
+        order = np.argsort(keys, kind="stable")
+        ks, cs = keys[order], cand[order]
+        bounds = np.flatnonzero(np.concatenate([[True], ks[1:] != ks[:-1]]))
+        red = (np.minimum if is_min else np.maximum).reduceat(cs, bounds, axis=0)
+        out[ks[bounds]] = red
+
+    gattrs = ([own_g] if own_g else []) + child_gattrs
+    raw = list(kept) + child_gattrs
+    arr = out.reshape(kdims + eng._dims(tuple(child_gattrs)))
+    want = sorted(gattrs, key=eng.canonical.index)
+    perm = [raw.index(a) for a in want]
+    if perm != list(range(len(perm))):
+        arr = np.transpose(arr, perm)
+    arr = np.where(np.isfinite(arr), arr, 0.0)
+    # reachability mask (zeros can be genuine MIN/MAX values): a COUNT run
+    cnt = TensorEngine(prep, domains=domains, encoded=encoded)
+    cnt.deco = deco
+    cmask = cnt.run() > 0
+    res: dict[tuple, float] = {}
+    nzi = np.nonzero(cmask)
+    cols = []
+    for (r, attr), codes in zip(prep.group_attrs, nzi):
+        off = (offsets or {}).get(attr, 0)
+        cols.append(prep.dicts[attr].decode(codes + off))
+    vals = arr[nzi]
+    for i, v in enumerate(vals):
+        res[tuple(c[i] for c in cols)] = float(v)
+    return res
+
+
+def _decompose_any_root(prep: Prepared, hg, root: str):
+    """Decomposition rooted anywhere (tensor engine doesn't need the
+    paper's group-relation-root rule); reuses the MST + RIP machinery."""
+    from repro.core import decomposition as D
+
+    order_all = [r for r in prep.query.relations if r in hg.edges]
+    parent = D._max_spanning_tree(hg, root, order_all)
+    D._check_running_intersection(hg, parent)
+    nodes = {
+        r: D.TreeNode(r, parent.get(r), is_group=r in prep.schema.group_of)
+        for r in order_all
+    }
+    for r, p in parent.items():
+        nodes[p].children.append(r)
+    order: list[str] = []
+    queue = [root]
+    while queue:
+        cur = queue.pop(0)
+        order.append(cur)
+        queue.extend(c for c in order_all if parent.get(c) == cur)
+    return D.Decomposition(
+        root=root, nodes=nodes, order=order,
+        group_relations=[r for r in order_all if r in prep.schema.group_of],
+        anchor={}, sink_anchor={}, branching_parent={},
+    )

@@ -1,0 +1,115 @@
+"""Real-world-shaped query workloads (paper Section VII, Table VI).
+
+The paper's real datasets (TPCH SF=1, DBLP, ORDS, IMDB) are not shipped
+offline; we synthesize datasets with the same *join shapes, skew and
+fan-outs* so Table VI's comparisons are reproducible at container scale:
+
+* TPCH  — [Q1]-shaped chain: supplier ⋈ lineitem ⋈ orders ⋈ customer,
+  GROUP BY (s_suppkey, c_zipcode): key joins + one low-selectivity hop.
+* DBLP  — co-author pair counting: self-join of (author, paper) on paper.
+* ORDS  — market-basket item pairs: self-join of (item, invoice) on
+  invoice (Zipf-distributed item popularity).
+* IMDB  — [Q2]-shaped path counting: Nodes ⋈ Edges ⋈ Edges ⋈ Nodes,
+  GROUP BY (n1.label, n2.label).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.query import JoinAggQuery
+from repro.relational.relation import Database
+
+
+def _zipf_ids(rng, n, dom, a=1.3):
+    z = rng.zipf(a, size=n)
+    return (z - 1) % dom
+
+
+def tpch_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    rng = np.random.default_rng(seed)
+    n_supp = max(2, n // 100)
+    n_ord = max(2, n // 4)
+    n_cust = max(2, n // 10)
+    n_zip = max(2, n_cust // 20)
+    lineitem = {
+        "suppkey": rng.integers(0, n_supp, n),
+        "orderkey": rng.integers(0, n_ord, n),
+    }
+    orders = {
+        "orderkey": np.arange(n_ord),
+        "custkey": rng.integers(0, n_cust, n_ord),
+    }
+    customer = {
+        "custkey": np.arange(n_cust),
+        "zipcode": _zipf_ids(rng, n_cust, n_zip),
+    }
+    supplier = {"suppkey": np.arange(n_supp), "sname": np.arange(n_supp)}
+    db = Database.from_mapping(
+        {
+            "supplier": supplier,
+            "lineitem": lineitem,
+            "orders": orders,
+            "customer": customer,
+        }
+    )
+    q = JoinAggQuery(
+        ("supplier", "lineitem", "orders", "customer"),
+        (("supplier", "sname"), ("customer", "zipcode")),
+    )
+    return db, q
+
+
+def dblp_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    rng = np.random.default_rng(seed)
+    n_auth = max(2, n // 5)
+    n_pap = max(2, n // 3)
+    auth = _zipf_ids(rng, n, n_auth)
+    pap = rng.integers(0, n_pap, n)
+    db = Database.from_mapping(
+        {
+            "AP1": {"a1": auth, "paper": pap},
+            "AP2": {"a2": auth, "paper": pap},
+        }
+    )
+    return db, JoinAggQuery(("AP1", "AP2"), (("AP1", "a1"), ("AP2", "a2")))
+
+
+def ords_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    rng = np.random.default_rng(seed)
+    n_item = max(2, n // 50)
+    n_inv = max(2, n // 8)
+    item = _zipf_ids(rng, n, n_item, a=1.2)
+    inv = rng.integers(0, n_inv, n)
+    db = Database.from_mapping(
+        {
+            "I1": {"i1": item, "invoice": inv},
+            "I2": {"i2": item, "invoice": inv},
+        }
+    )
+    return db, JoinAggQuery(("I1", "I2"), (("I1", "i1"), ("I2", "i2")))
+
+
+def imdb_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    """[Q2] path counting: N1 ⋈ E1 ⋈ E2 ⋈ N2 grouped by labels."""
+    rng = np.random.default_rng(seed)
+    n_nodes = max(4, n // 10)
+    n_labels = 24
+    src = _zipf_ids(rng, n, n_nodes, a=1.25)
+    dst = _zipf_ids(rng, n, n_nodes, a=1.25)
+    labels = rng.integers(0, n_labels, n_nodes)
+    db = Database.from_mapping(
+        {
+            "N1": {"id1": np.arange(n_nodes), "label1": labels},
+            "E1": {"id1": src, "mid": dst},
+            "E2": {"mid": src, "id2": dst},
+            "N2": {"id2": np.arange(n_nodes), "label2": labels},
+        }
+    )
+    q = JoinAggQuery(
+        ("N1", "E1", "E2", "N2"),
+        (("N1", "label1"), ("N2", "label2")),
+    )
+    return db, q
+
+
+REAL = {"TPCH": tpch_like, "DBLP": dblp_like, "ORDS": ords_like, "IMDB": imdb_like}

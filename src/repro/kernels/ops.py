@@ -1,0 +1,10 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (kernel bodies execute in
+Python for validation) and False on real TPU backends.
+"""
+from repro.kernels.coo_spmm import coo_spmm
+from repro.kernels.segment_sum import segment_sum
+from repro.kernels.semiring_matmul import semiring_matmul
+
+__all__ = ["segment_sum", "coo_spmm", "semiring_matmul"]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """out[s] = sum of data rows with segment_ids == s."""
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def coo_spmm_ref(
+    rows: jax.Array, cols: jax.Array, vals: jax.Array, dense: jax.Array, num_rows: int
+) -> jax.Array:
+    """out[rows[i], :] += vals[i] * dense[cols[i], :]."""
+    gathered = dense[cols] * vals[:, None]
+    return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
+
+
+def semiring_matmul_ref(a: jax.Array, b: jax.Array, semiring: str = "add_mul") -> jax.Array:
+    """C[i,j] = ⊕_k a[i,k] ⊗ b[k,j] for the chosen semiring."""
+    if semiring == "add_mul":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    expanded = a[:, :, None]  # (m, k, 1)
+    if semiring == "max_add":
+        return jnp.max(expanded + b[None, :, :], axis=1)
+    if semiring == "min_add":
+        return jnp.min(expanded + b[None, :, :], axis=1)
+    if semiring == "or_and":
+        hit = jnp.any((expanded > 0) & (b[None, :, :] > 0), axis=1)
+        return hit.astype(a.dtype)
+    raise ValueError(semiring)

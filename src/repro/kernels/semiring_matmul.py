@@ -1,0 +1,97 @@
+"""Pallas TPU blocked semiring matmul.
+
+JOIN-AGG contractions are matmuls in a configurable semiring
+(Section IV-D): COUNT/SUM use (+, ×) on the MXU; MIN/MAX aggregates use
+(min/max, +) and reachability uses (or, and) — those have no MXU form, so
+the kernel keeps MXU for add_mul and lowers the exotic semirings to
+VPU-friendly elementwise ops over k-slices while preserving the same
+VMEM blocking.
+
+Grid ``(m_tiles, n_tiles, k_tiles)``; C tile accumulates across k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_IDENT = {"add_mul": 0.0, "max_add": -jnp.inf, "min_add": jnp.inf, "or_and": 0.0}
+
+
+def _semiring_matmul_kernel(a_ref, b_ref, c_ref, *, semiring: str, k_step: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        c_ref[...] = jnp.full_like(c_ref, _IDENT[semiring])
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if semiring == "add_mul":
+        c_ref[...] += jnp.dot(a, b, preferred_element_type=c_ref.dtype)
+        return
+
+    def body(i, acc):
+        lo = i * k_step
+        a_sl = jax.lax.dynamic_slice_in_dim(a, lo, k_step, axis=1)
+        b_sl = jax.lax.dynamic_slice_in_dim(b, lo, k_step, axis=0)
+        if semiring == "max_add":
+            upd = jnp.max(a_sl[:, :, None] + b_sl[None, :, :], axis=1)
+            return jnp.maximum(acc, upd)
+        if semiring == "min_add":
+            upd = jnp.min(a_sl[:, :, None] + b_sl[None, :, :], axis=1)
+            return jnp.minimum(acc, upd)
+        # or_and
+        hit = jnp.any((a_sl[:, :, None] > 0) & (b_sl[None, :, :] > 0), axis=1)
+        return jnp.maximum(acc, hit.astype(acc.dtype))
+
+    steps = a.shape[1] // k_step
+    acc = jax.lax.fori_loop(0, steps, body, c_ref[...])
+    c_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("semiring", "block_m", "block_n", "block_k", "interpret"),
+)
+def semiring_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    semiring: str = "add_mul",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """C = A ⊗ B over the chosen semiring; A (m, k), B (k, n)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if semiring not in _IDENT:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    pad_fill = 0.0 if semiring in ("add_mul", "or_and") else (
+        jnp.inf if semiring == "min_add" else -jnp.inf
+    )
+    m_pad, n_pad, k_pad = -m % block_m, -n % block_n, -k % block_k
+    if m_pad or k_pad:
+        a = jnp.pad(a, ((0, m_pad), (0, k_pad)), constant_values=pad_fill)
+    if k_pad or n_pad:
+        b = jnp.pad(b, ((0, k_pad), (0, n_pad)), constant_values=pad_fill)
+    grid = (a.shape[0] // block_m, b.shape[1] // block_n, a.shape[1] // block_k)
+    k_step = min(8, block_k)
+    out = pl.pallas_call(
+        functools.partial(_semiring_matmul_kernel, semiring=semiring, k_step=k_step),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

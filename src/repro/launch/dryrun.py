@@ -1,0 +1,342 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh)
+cell with ShapeDtypeStruct inputs (no allocation), then extract
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out launch_results
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+from repro.models.model import get_model  # noqa: E402
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Collective ops in the partitioned module: kind, result bytes per
+    device, and group size (best-effort from replica_groups)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        gsize = None
+        g = _GROUPS_RE.search(line)
+        if g:
+            gsize = g.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                gsize = int(gi.group(2))
+        out.append({"kind": kind, "bytes": nbytes, "group": gsize or 16})
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted fn, input ShapeDtypeStructs tuple).
+
+    Perf-iteration knobs (EXPERIMENTS.md §Perf), env-controlled so the
+    baseline stays the default:
+      REPRO_SHARD_CONSTRAINTS=1  activation sharding constraints
+      REPRO_ACCUM=N              gradient accumulation (train cells)
+    """
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_PAD_HEADS"):
+        tp = mesh.shape.get("model", 1)
+        pad = -cfg.n_heads % tp
+        if pad:
+            cfg = cfg.scaled(pad_heads_to=cfg.n_heads + pad)
+    model = get_model(cfg)
+    shape = SHAPES[shape_name]
+    mode = os.environ.get("REPRO_SHARD_CONSTRAINTS")
+    if mode:
+        from repro.models import shard_ctx
+
+        shard_ctx.set_mesh(mesh, "all" if mode == "1" else mode)
+    else:
+        from repro.models import shard_ctx
+
+        shard_ctx.set_mesh(None)
+    accum = int(os.environ.get("REPRO_ACCUM", "1"))
+
+    if shape.kind == "train":
+        specs_batch = model.input_specs(shape)
+        params_s = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        opt_s = jax.eval_shape(lambda: adamw_init(params_s))
+        p_sh = shd.param_shardings(params_s, cfg, mesh)
+        o_sh = shd.opt_shardings(opt_s, p_sh, mesh)
+        b_sh = shd.batch_shardings(specs_batch, mesh)
+        acfg = AdamWConfig()
+
+        def train_step(params, opt, batch):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            else:
+                def one(carry, mb):
+                    tl, tg = carry
+                    l, g = jax.value_and_grad(model.loss)(params, mb)
+                    return (tl + l, jax.tree.map(jnp.add, tg, g)), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(
+                        (accum, x.shape[0] // accum) + x.shape[1:]
+                    ),
+                    batch,
+                )
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (loss, grads), _ = jax.lax.scan(
+                    one, (jnp.zeros(()), zero), mbs
+                )
+                loss = loss / accum
+                grads = jax.tree.map(lambda g: g / accum, grads)
+            params, opt, metrics = adamw_update(params, grads, opt, acfg)
+            return params, opt, loss, metrics["grad_norm"]
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P()),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        args = (
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         params_s, p_sh),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                         opt_s, o_sh),
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+             for k, v in specs_batch.items()},
+        )
+        return fn, args
+
+    params_s = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = shd.param_shardings(params_s, cfg, mesh)
+    p_args = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_s, p_sh,
+    )
+
+    if shape.kind == "prefill":
+        specs_batch = model.input_specs(shape)
+        b_sh = shd.batch_shardings(specs_batch, mesh)
+        cache_s = jax.eval_shape(model.prefill, params_s, specs_batch)[1]
+        c_sh = shd.cache_shardings(cache_s, cfg, mesh, shape.global_batch)
+
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(NamedSharding(mesh, P()), c_sh),
+        )
+        b_args = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+                  for k, v in specs_batch.items()}
+        return fn, (p_args, b_args)
+
+    # decode: one token against a seq_len cache
+    specs = model.input_specs(shape)
+    cache_s = specs["cache"]
+    c_sh = shd.cache_shardings(cache_s, cfg, mesh, shape.global_batch)
+    tok_sh = NamedSharding(mesh, shd.batch_spec("tokens", specs["tokens"], mesh))
+    pos_sh = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(NamedSharding(mesh, P()), c_sh),
+        donate_argnums=(1,),
+    )
+    cache_args = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_s, c_sh,
+    )
+    args = (
+        p_args,
+        cache_args,
+        jax.ShapeDtypeStruct(specs["tokens"].shape, jnp.int32, sharding=tok_sh),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=pos_sh),
+    )
+    return fn, args
+
+
+def applicable(arch: str, shape_name: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full attention (see DESIGN.md)"
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             hlo_dir: str | None = None) -> dict:
+    ok, why = applicable(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args = build_cell(arch, shape_name, mesh)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo_text = compiled.as_text()
+        if hlo_dir:
+            import gzip
+
+            os.makedirs(hlo_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    hlo_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"),
+                    "wt") as zf:
+                zf.write(hlo_text)
+        from repro.launch import hlo_analysis
+
+        deep = hlo_analysis.analyze(hlo_text)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            flops_cost_analysis=float(cost.get("flops", -1)),
+            bytes_accessed_cost_analysis=float(cost.get("bytes accessed", -1)),
+            # trip-count-aware per-device numbers (see hlo_analysis.py)
+            dot_flops=deep["dot_flops"],
+            hbm_bytes=deep["hbm_bytes"],
+            collective_bytes=deep["collective_bytes"],
+            collectives_detail=deep["collectives_detail"],
+            top_collectives=deep["top_collectives"],
+            collectives_by_kind={
+                k: {"bytes": v["bytes"], "count": v["count"]}
+                for k, v in deep["collectives_by_kind"].items()
+            },
+            memory={
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+        )
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_kind}: OK "
+            f"compile={rec['compile_s']}s dot_flops={rec['dot_flops']:.3e} "
+            f"coll_bytes={rec['collective_bytes']:.3e} "
+            f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+            flush=True,
+        )
+    except Exception as e:  # record and continue — failures are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: FAIL {rec['error']}",
+              flush=True)
+    return rec
+
+
+def _summarize(colls: list[dict]) -> dict:
+    agg: dict = {"total_bytes": 0.0, "by_kind": {}, "count": len(colls)}
+    for c in colls:
+        agg["total_bytes"] += c["bytes"]
+        k = c["kind"]
+        e = agg["by_kind"].setdefault(k, {"bytes": 0.0, "count": 0, "groups": {}})
+        e["bytes"] += c["bytes"]
+        e["count"] += 1
+        g = str(c["group"])
+        e["groups"][g] = e["groups"].get(g, 0) + 1
+    return agg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="launch_results")
+    ap.add_argument("--resume", action="store_true", help="skip cells already done")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = (
+        [(a, s, m) for a in ARCHS for s in SHAPES for m in ("single", "multi")]
+        if args.all
+        else [(args.arch, args.shape, args.mesh)]
+    )
+    for arch, shape_name, mesh_kind in cells:
+        path = os.path.join(args.out, f"{arch}__{shape_name}__{mesh_kind}.json")
+        if args.resume and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    continue
+        rec = run_cell(arch, shape_name, mesh_kind,
+                       hlo_dir=os.path.join(args.out, "hlo"))
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Trip-count-aware analysis of a partitioned HLO module.
+
+``compiled.cost_analysis()`` counts every while-loop body **once**, which
+undercounts scanned programs (layer scans, flash-attention chunk loops)
+by the trip count.  This module parses ``compiled.as_text()`` instead:
+
+* builds the computation call graph (while bodies with
+  ``known_trip_count``, fusions, calls),
+* propagates execution multipliers from ENTRY,
+* counts dot FLOPs (2 × |out| × |contracted|) and collective bytes
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) **scaled by how often each computation runs**.
+
+Elementwise FLOPs are ignored (bandwidth-bound; invisible at roofline
+granularity) — so ``dot_flops`` is a *matmul* floor of true HLO FLOPs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# Ops whose outputs actually land in HBM on a TPU.  Elementwise chains
+# (add/mul/exp/convert/...) fuse into their consumers on TPU — the CPU
+# backend we compile with fuses differently, so counting every op output
+# would systematically inflate the memory term.  We count only ops that
+# materialize: MXU ops, data movement, reductions, and collectives.
+_MATERIALIZING_OPS = {
+    "dot", "convolution", "fusion", "custom-call",
+    "scatter", "gather", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "reduce-window", "sort", "copy", "copy-start",
+    "concatenate", "pad", "transpose", "rng", "rng-bit-generator",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "select-and-scatter", "cholesky", "triangular-solve",
+}
+
+
+@dataclass
+class Computation:
+    name: str
+    dot_flops: float = 0.0
+    out_bytes: float = 0.0  # materialized op outputs (HBM traffic proxy)
+    collectives: list = field(default_factory=list)  # (kind, bytes, group)
+    # edges: callee name -> multiplier (trip count for while bodies, 1 else)
+    edges: dict = field(default_factory=dict)
+    # structural edges (while/conditional/call) propagate HBM bytes;
+    # fusion / to_apply edges do not (their bodies live in registers)
+    struct_edges: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    shapes: dict[str, str] = {}
+    entry = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line.strip()) if not line.startswith(" ") else None
+        if hdr and ("{" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            shapes = {}
+            # parameters: record their shapes from the header args
+            for pm in re.finditer(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\],{}]+)", hdr.group(2)):
+                shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        d = _DEF.match(line)
+        if not d:
+            continue
+        name, out_type, op = d.group(1), d.group(2).strip(), d.group(3)
+        shapes[name] = out_type
+        if op in _MATERIALIZING_OPS:
+            cur.out_bytes += _bytes_of(out_type)
+
+        if op == "dot":
+            flops = _dot_flops(line, out_type, shapes)
+            cur.dot_flops += flops
+        elif op.rstrip("-start").rstrip("-done") in COLLECTIVES or any(
+            op.startswith(c) for c in COLLECTIVES
+        ):
+            kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+            if kind and not op.endswith("-done"):
+                gsize = None
+                g = _GROUPS_LIST.search(line)
+                if g:
+                    gsize = g.group(1).count(",") + 1
+                else:
+                    gi = _GROUPS_IOTA.search(line)
+                    if gi:
+                        gsize = int(gi.group(2))
+                cur.collectives.append((kind, _bytes_of(out_type), gsize or 1))
+        elif op == "while":
+            body = _WHILE_BODY.search(line)
+            cond = _WHILE_COND.search(line)
+            trip = _TRIP.search(line)
+            n = int(trip.group(1)) if trip else 1
+            if body:
+                cur.edges[body.group(1)] = cur.edges.get(body.group(1), 0) + n
+                cur.struct_edges[body.group(1)] = (
+                    cur.struct_edges.get(body.group(1), 0) + n
+                )
+            if cond:
+                cur.edges[cond.group(1)] = cur.edges.get(cond.group(1), 0) + n + 1
+                cur.struct_edges[cond.group(1)] = (
+                    cur.struct_edges.get(cond.group(1), 0) + n + 1
+                )
+        elif op == "conditional":
+            b = _BRANCHES.search(line)
+            if b:
+                for br in re.findall(r"%?([\w.\-]+)", b.group(1)):
+                    cur.edges[br] = cur.edges.get(br, 0) + 1
+                    cur.struct_edges[br] = cur.struct_edges.get(br, 0) + 1
+        else:
+            c = _CALLS.search(line)
+            if c:
+                cur.edges[c.group(1)] = cur.edges.get(c.group(1), 0) + 1
+                if op == "call":
+                    cur.struct_edges[c.group(1)] = (
+                        cur.struct_edges.get(c.group(1), 0) + 1
+                    )
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(line: str, out_type: str, shapes: dict[str, str]) -> float:
+    dims = _dims(out_type)
+    if not dims:
+        return 0.0
+    out_elems = 1
+    for d in dims[0][1]:
+        out_elems *= d
+    m = re.search(r"dot\(\s*%?([\w.\-]+)\s*,", line)
+    contract = _CONTRACT.search(line)
+    k = 1
+    if m and contract and m.group(1) in shapes:
+        lhs_dims = _dims(shapes[m.group(1)])
+        if lhs_dims:
+            ld = lhs_dims[0][1]
+            for ci in [int(x) for x in contract.group(1).split(",") if x]:
+                if ci < len(ld):
+                    k *= ld[ci]
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry = comps["__entry__"]
+
+    # propagate multipliers through the (acyclic) call graph: wave-style
+    # BFS where each path contributes the product of its edge factors —
+    # the sum over paths is the total execution count of a computation.
+    def propagate(edge_attr: str) -> dict[str, float]:
+        frontier: dict[str, float] = {entry.name: 1.0}
+        mult: dict[str, float] = defaultdict(float)
+        waves = 0
+        while frontier and waves < 10_000:
+            waves += 1
+            nxt: dict[str, float] = defaultdict(float)
+            for cname, m in frontier.items():
+                mult[cname] += m
+                for callee, factor in getattr(comps[cname], edge_attr).items():
+                    if callee in comps and callee != cname:
+                        nxt[callee] += m * factor
+            frontier = nxt
+        return mult
+
+    mult = propagate("edges")
+    bmult = propagate("struct_edges")
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    colls: list[dict] = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        hbm_bytes += comp.out_bytes * bmult.get(cname, 0.0) * 2  # read≈write
+        if m == 0:
+            continue
+        flops += comp.dot_flops * m
+        for kind, nbytes, group in comp.collectives:
+            colls.append(
+                {"kind": kind, "bytes": nbytes * m, "group": group, "mult": m}
+            )
+
+    by_kind: dict[str, dict] = {}
+    total = 0.0
+    for c in colls:
+        total += c["bytes"]
+        e = by_kind.setdefault(c["kind"], {"bytes": 0.0, "count": 0.0})
+        e["bytes"] += c["bytes"]
+        e["count"] += c["mult"]
+    # aggregate detail by (kind, group) for compact persistence
+    detail: dict[tuple, float] = {}
+    for c in colls:
+        key = (c["kind"], c["group"])
+        detail[key] = detail.get(key, 0.0) + c["bytes"]
+    # top individual collectives for hillclimb debugging
+    top = sorted(colls, key=lambda c: -c["bytes"])[:12]
+    return {
+        "dot_flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "top_collectives": top,
+        "collective_bytes": total,
+        "collectives_by_kind": by_kind,
+        "collectives": colls,
+        "collectives_detail": [
+            {"kind": k, "group": g, "bytes": b} for (k, g), b in sorted(detail.items())
+        ],
+    }

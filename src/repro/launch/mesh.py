@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never
+touches jax device state.  Single pod = 256 chips as (data=16, model=16);
+multi-pod = 2 pods × 256 as (pod=2, data=16, model=16) where the ``pod``
+axis crosses DCN (data parallel, gradient reduction only) and ``data`` /
+``model`` stay within a pod's ICI.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (launch/dryrun.py does this)"
+        )
+    # more devices than needed (e.g. 512 present, single-pod mesh): slice
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying batch/data parallelism (pod included when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,169 @@
+"""Roofline analysis over the dry-run results (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, three per-step time bounds on TPU v5e:
+
+    compute    = dot_flops(per device)            / 197e12  FLOP/s (bf16)
+    memory     = hbm_bytes(per device)            / 819e9   B/s
+    collective = Σ ring-model traffic per device  / link bandwidth
+
+dot_flops / hbm_bytes come from the trip-count-aware HLO analysis
+(hlo_analysis.py; cost_analysis undercounts loop bodies).  Collective
+traffic uses ring algorithms: all-gather/all-to-all (k-1)/k × bytes,
+all-reduce 2(k-1)/k × bytes, reduce-scatter (k-1) × result bytes,
+permute 1×.  Groups that span pods (size 2 / 32 / 512 on the multi-pod
+mesh) ride DCN at 25 GB/s; in-pod groups ride ICI at 50 GB/s/link.
+
+MODEL_FLOPS (global, then ÷chips):
+    train    6·N_active·D          (D = tokens per step)
+    prefill  2·N_active·D
+    decode   2·N_active·B + 4·L·nh·hd·S·B   (KV-cache attention reads)
+The ratio MODEL/HLO exposes remat recompute, padding waste (uneven head
+sharding), and dead flops.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import ARCHS, get_config
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+CHIPS = {"single": 256, "multi": 512}
+
+
+def ring_traffic(kind: str, nbytes: float, k: int) -> float:
+    if k <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2 * (k - 1) / k * nbytes
+    if kind == "reduce-scatter":
+        return (k - 1) * nbytes  # nbytes = result shard
+    if kind == "collective-permute":
+        return nbytes
+    return (k - 1) / k * nbytes  # all-gather / all-to-all
+
+
+def collective_seconds(colls: list[dict], mesh_kind: str) -> float:
+    total = 0.0
+    for c in colls:
+        k = max(int(c.get("group", 1)), 1)
+        bw = DCN_BW if (mesh_kind == "multi" and k in (2, 32, 512)) else ICI_BW
+        total += ring_traffic(c["kind"], c["bytes"], k) / bw
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    # useful causal attention flops per layer per sequence (fwd):
+    # qk + av over the causal half = 2 * (S^2/2) * nh * hd * 2 = 2 S^2 nh hd
+    n_attn_layers = 0
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_attn_layers = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // max(cfg.shared_period, 1)
+    elif cfg.family == "audio":
+        n_attn_layers = cfg.n_layers + cfg.enc_layers  # self (+cross ~small)
+    attn_fwd = 2.0 * S * S * cfg.n_heads * cfg.hd * n_attn_layers * B
+    if shape.kind == "train":
+        return 6.0 * N * B * S + 3.0 * attn_fwd
+    if shape.kind == "prefill":
+        return 2.0 * N * B * S + attn_fwd
+    # decode: one token over a length-S cache
+    flops = 2.0 * N * B
+    flops += 4.0 * n_attn_layers * cfg.n_heads * cfg.hd * S * B
+    return flops
+
+
+def load_cells(out_dir: str) -> list[dict]:
+    cells = []
+    for fname in sorted(os.listdir(out_dir)):
+        if fname.endswith(".json"):
+            with open(os.path.join(out_dir, fname)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    mesh_kind = rec["mesh"]
+    chips = CHIPS[mesh_kind]
+    compute_t = rec["dot_flops"] / PEAK_FLOPS
+    memory_t = rec.get("hbm_bytes", rec.get("bytes_accessed_cost_analysis", 0)) / HBM_BW
+    colls = []
+    for kind, v in rec.get("collectives_by_kind", {}).items():
+        # reconstruct per-kind average group from detail if present
+        colls.append({"kind": kind, "bytes": v["bytes"], "group": 16})
+    if "collectives_detail" in rec:
+        colls = rec["collectives_detail"]
+    coll_t = collective_seconds(colls, mesh_kind)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        **rec,
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / rec["dot_flops"] if rec["dot_flops"] else 0.0,
+        "roofline_fraction": compute_t / bound if bound else 0.0,
+    }
+
+
+def markdown_table(cells: list[dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bottleneck | MODEL/HLO | roofline frac | HBM fit |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in cells:
+        if rec.get("status") == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | "
+                f"skipped | — | — | {rec['reason']} |"
+            )
+            continue
+        a = analyze_cell(rec)
+        if a is None:
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | "
+                f"ERROR | — | — | {rec.get('error','?')[:60]} |"
+            )
+            continue
+        temp = rec.get("memory", {}).get("temp_size_in_bytes", 0)
+        fit = f"{temp/2**30:.1f} GiB {'✓' if temp < 14e9 else '✗ OOM'}"
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['compute_s']*1e3:.2f} | {a['memory_s']*1e3:.2f} "
+            f"| {a['collective_s']*1e3:.2f} | {a['dominant']} "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_fraction']:.2f} | {fit} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="launch_results")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.results)
+    print(markdown_table(cells))
+    if args.json_out:
+        out = [analyze_cell(c) or c for c in cells]
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode
+with the fixed-capacity KV/state cache (the decode_32k / long_500k cells
+lower exactly this step function onto the production meshes).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --reduced --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import get_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((B, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((B, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16)
+
+    # prefill feeds the recurrent families' cache directly; attention
+    # families decode against a fixed-capacity cache re-filled token-wise
+    t0 = time.time()
+    cap = P + G + (cfg.vision_patches if cfg.family == "vlm" else 0)
+    cache = model.init_cache(B, cap)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1],
+                               jnp.asarray(t, jnp.int32))
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for t in range(P, P + G):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_gen = time.time() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"[serve] prefill(token-wise)={t_prefill:.2f}s  "
+          f"decode={t_gen:.2f}s ({B * G / max(t_gen, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample generations (token ids): {gen[:2, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Sharding rules: parameter / optimizer / batch / cache partition specs.
+
+Baseline strategy (the hillclimb in EXPERIMENTS.md §Perf starts here):
+
+* FSDP over ``data`` — every matrix shards its d_model-sized dim,
+* Megatron TP over ``model`` — the head/ffn-sized dim,
+* MoE expert parallelism — experts over ``data`` + TP over ``model``,
+* cross-pod (``pod``): pure data parallelism (params replicated over the
+  pod axis; gradients all-reduce over DCN),
+* batch over (pod, data); decode caches: batch over data, kv-heads over
+  model; long-context (batch < data size): KV sequence over data
+  (sequence parallelism for the 500k cell).
+
+GSPMD handles non-divisible dims (56 heads on 16-way model) by padding.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def param_spec(path, leaf, cfg: ModelConfig) -> P:
+    name = _path_str(path)
+    shape = leaf.shape
+    d = cfg.d_model
+
+    if name.endswith("embed"):
+        return P("model", "data")  # vocab-parallel + FSDP
+    if name.endswith("lm_head"):
+        return P("data", "model")
+
+    # layer-stacked params carry scan dims in front: (L, ...) — and the
+    # hybrid family stacks (groups, period, ...)
+    stack = 0
+    if name.startswith("layers") or name.startswith("enc_layers"):
+        stack = 2 if cfg.family == "hybrid" else 1
+    body = shape[stack:]
+    lead = (None,) * stack
+
+    if "moe" in name and len(body) == 3:
+        # (E, a, b): expert-parallel over data, TP over the ffn dim
+        if body[1] == d:  # wg/wu: (E, d, f)
+            return P(*lead, "data", None, "model")
+        return P(*lead, "data", "model", None)  # wd: (E, f, d)
+    if len(body) != 2:
+        return P()  # norms, biases, scalars, small tensors: replicated
+    a, b = body
+    if a == d:  # in-projections (d -> X): FSDP on d, TP on X
+        return P(*lead, "data", "model")
+    if b == d:  # out-projections (X -> d): TP on X, FSDP on d
+        return P(*lead, "model", "data") if a >= 128 else P(*lead, None, "data")
+    if a >= 128 and b >= 128 and b % 128 == 0:
+        return P(*lead, None, "model")
+    return P()
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """jit *argument* shardings must divide evenly (unlike intermediates,
+    which GSPMD pads) — drop any axis that doesn't divide its dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        out.append(entry if shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def param_shardings(params, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _sanitize(param_spec(path, leaf, cfg), leaf.shape, mesh)
+        ),
+        params,
+    )
+
+
+def opt_shardings(opt_state, params_shardings, mesh: Mesh):
+    """m/v shard exactly like their parameter; step is replicated."""
+    return {
+        "m": params_shardings,
+        "v": params_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_spec(name: str, leaf, mesh: Mesh) -> P:
+    if leaf.ndim == 0:
+        return P()
+    total_dp = 1
+    for a in data_axes(mesh):
+        total_dp *= mesh.shape[a]
+    if leaf.shape[0] < total_dp:
+        return P()  # tiny batch (long-context decode): replicate
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    extra = (None,) * (len(leaf.shape) - 1)
+    return P(dp, *extra)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return {
+        k: NamedSharding(mesh, _sanitize(batch_spec(k, v, mesh), v.shape, mesh))
+        for k, v in batch.items()
+    }
+
+
+def cache_spec(path, leaf, cfg: ModelConfig, mesh: Mesh, batch_size: int) -> P:
+    """KV caches (L, B, S, nkv, hd) / SSM states (L, B, ...).
+
+    KV is batch-sharded over ``data`` and **sequence-sharded over
+    ``model``** (kv-head counts rarely divide 16; the sequence axis always
+    does, and seq-sharded decode attention is the standard long-context
+    layout — softmax reductions become psums over ``model``).  A tiny
+    batch (long_500k) puts the sequence over both axes."""
+    name = _path_str(path)
+    dsize = mesh.shape["data"]
+    shape = leaf.shape
+    if name.endswith(("k", "v")) and len(shape) == 5:
+        S_len = shape[2]
+        if batch_size >= dsize:
+            return P(None, "data", "model", None, None)
+        if S_len % (dsize * mesh.shape["model"]) == 0:
+            return P(None, None, ("data", "model"), None, None)
+        return P(None, None, "model", None, None)
+    bax = "data" if batch_size >= dsize else None
+    if name.endswith("ssm") or name.endswith("wkv"):
+        lead = (None,) * (len(shape) - 4)
+        return P(*lead, bax, "model", None, None)
+    if name.endswith("conv"):  # (G, period, B, K-1, C)
+        return P(None, None, bax, None, None)
+    if len(shape) >= 3:
+        return P(None, bax, *(None,) * (len(shape) - 2))
+    return P()
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh, batch_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _sanitize(cache_spec(path, leaf, cfg, mesh, batch_size),
+                            leaf.shape, mesh)
+        ),
+        cache,
+    )

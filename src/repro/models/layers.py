@@ -1,0 +1,404 @@
+"""Transformer building blocks as pure functions over param pytrees.
+
+Conventions:
+* params are nested dicts of jnp arrays; init fns take a PRNG key,
+* activations default to bf16 with f32 softmax/norm accumulations,
+* attention is a pure-JAX flash formulation (double scan over q/kv chunks
+  with online softmax) so 32k prefill never materializes S×S scores,
+* MoE uses sort-free capacity dispatch (rank-in-expert via cumsum; scatter
+  with mode='drop'), the standard TPU-friendly static-shape formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.shard_ctx import constrain
+
+import os
+
+# §Perf knob: statically skip fully-masked kv chunks in causal flash
+# attention (halves attention flops/bytes for long prefill).  Env-gated
+# so the paper-baseline lowering stays reproducible.
+_CAUSAL_SKIP = lambda: os.environ.get("REPRO_CAUSAL_SKIP") == "1"
+
+# ---------------------------------------------------------------- init
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, bias=False):
+    p = {"w": dense_init(key, d_in, d_out)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_angles(pos, hd, theta, sections=()):
+    """pos (..., S) int -> cos/sin (..., S, hd//2).
+
+    With ``sections`` (M-RoPE), pos is (..., S, n_sections) and frequency
+    groups are driven by their own position stream (Qwen2-VL)."""
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        sec_id = np.repeat(np.arange(len(sections)), sections)
+        pos = pos.astype(jnp.float32)[..., sec_id]  # (..., S, half)
+        ang = pos * freqs
+    else:
+        ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, n, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg):
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.nh_eff, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, nh * hd, cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, nkv * hd, cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, nkv * hd, cfg.qkv_bias),
+        "wo": init_linear(ks[3], nh * hd, d),
+    }
+
+
+def _qkv(p, x, cfg, cos, sin, rope=True):
+    B, S, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.nh_eff, cfg.n_kv
+    q = constrain(linear(p["wq"], x).reshape(B, S, nh, hd), "bthd")
+    # GQA kv heads are few: replicate across TP (one small all-gather per
+    # layer) instead of fractional-head sharding (per-chunk all-reduces)
+    k = constrain(linear(p["wk"], x).reshape(B, S, nkv, hd), "bthd_rep")
+    v = constrain(linear(p["wv"], x).reshape(B, S, nkv, hd), "bthd_rep")
+    if rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def flash_attention(q, k, v, causal=True, q_chunk=512, kv_chunk=1024):
+    """q (B,Sq,nh,hd), k/v (B,Skv,nkv,hd); GQA by head grouping.
+
+    Double-scan online-softmax: memory O(Sq·hd + q_chunk·kv_chunk)."""
+    B, Sq, nh, hd = q.shape
+    _, Sk, nkv, _ = k.shape
+    g = nh // nkv
+    scale = hd**-0.5
+    q = (q * scale).reshape(B, Sq, nkv, g, hd)
+
+    if Sq <= 2048 and Sk <= 2048:  # small: one einsum
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+        if causal:
+            mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+        return o.reshape(B, Sq, nh, hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    q_pad = -Sq % q_chunk
+    k_pad = -Sk % kv_chunk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + q_pad, Sk + k_pad
+    nq, nk = Sq_p // q_chunk, Sk_p // kv_chunk
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, nkv, g, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kv_chunk, nkv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kv_chunk, nkv, hd), 1, 0)
+
+    def one_q(qi_and_chunk):
+        qi, qc = qi_and_chunk  # qc (B, Cq, nkv, g, hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kc, vc = inp
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] < Sk  # padded kv slots never attend
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        return o  # (B, nkv, g, Cq, hd)
+
+    if causal and _CAUSAL_SKIP():
+        # python-unrolled q chunks; chunk i scans only its causal kv
+        # prefix (static trip counts -> visible to the roofline analysis)
+        chunks = []
+        for qi in range(nq):
+            nkv_i = min(nk, ((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+            chunks.append(
+                _flash_one_q_prefix(
+                    qi, qs[qi], ks[:nkv_i], vs[:nkv_i],
+                    q_chunk, kv_chunk, Sk, causal,
+                )
+            )
+        outs = jnp.stack(chunks)
+    else:
+        outs = jax.lax.map(one_q, (jnp.arange(nq), qs))  # (nq, B, nkv, g, Cq, hd)
+    o = jnp.moveaxis(outs, 0, 3)  # (B, nkv, g, nq, Cq, hd)
+    o = o.reshape(B, nkv, g, Sq_p, hd).transpose(0, 3, 1, 2, 4)
+    return o.reshape(B, Sq_p, nh, hd)[:, :Sq].astype(v.dtype)
+
+
+def _flash_one_q_prefix(qi, qc, ks, vs, q_chunk, kv_chunk, Sk, causal):
+    """One q chunk against its (static) causal kv prefix."""
+    B, Cq, nkv, g, hd = qc.shape
+
+    def kv_step(carry, inp):
+        m, l, acc = carry
+        ki, kc, vc = inp
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nkv, g, q_chunk), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, q_chunk, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, (m0, l0, a0), (jnp.arange(ks.shape[0]), ks, vs)
+    )
+    return acc / jnp.maximum(l, 1e-20)[..., None]
+
+
+def attention_train(p, x, cfg, cos, sin, rope=True, causal=True):
+    q, k, v = _qkv(p, x, cfg, cos, sin, rope)
+    o = flash_attention(q, k, v, causal=causal)
+    B, S = x.shape[:2]
+    return constrain(linear(p["wo"], o.reshape(B, S, -1)), "btd")
+
+
+def cross_attention_train(p, x, mem_kv, cfg):
+    """x (B,S,d) attends to precomputed memory k/v (B,M,nkv,hd) pairs."""
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, cfg.nh_eff, cfg.hd)
+    k, v = mem_kv
+    o = flash_attention(q, k, v, causal=False)
+    return linear(p["wo"], o.reshape(B, S, -1))
+
+
+def attention_decode(p, x, cache, pos, cfg, cos, sin, rope=True):
+    """Single-step decode. cache: dict(k=(B,S,nkv,hd), v=...); pos scalar.
+
+    Returns (out (B,1,d), new cache).  The cache slot at ``pos`` is
+    dynamically updated; scores over future slots are masked."""
+    B = x.shape[0]
+    hd, nh, nkv = cfg.hd, cfg.nh_eff, cfg.n_kv
+    q = linear(p["wq"], x).reshape(B, 1, nh, hd)
+    k = linear(p["wk"], x).reshape(B, 1, nkv, hd)
+    v = linear(p["wv"], x).reshape(B, 1, nkv, hd)
+    if rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    g = nh // nkv
+    S = ck.shape[1]
+    qh = (q * hd**-0.5).reshape(B, 1, nkv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh, ck).astype(jnp.float32)
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pr, cv).reshape(B, 1, nh * hd)
+    return linear(p["wo"], o), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------- MLPs
+
+
+def init_mlp_swiglu(key, d, f):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": init_linear(k1, d, f),
+        "wu": init_linear(k2, d, f),
+        "wd": init_linear(k3, f, d),
+    }
+
+
+def mlp_swiglu(p, x):
+    h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x)
+    h = constrain(h, "btf")
+    return constrain(linear(p["wd"], h), "btd")
+
+
+def init_mlp_gelu(key, d, f):
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": init_linear(k1, d, f, bias=True), "wo": init_linear(k2, f, d, bias=True)}
+
+
+def mlp_gelu(p, x):
+    h = constrain(jax.nn.gelu(linear(p["wi"], x)), "btf")
+    return constrain(linear(p["wo"], h), "btd")
+
+
+# ---------------------------------------------------------------- MoE
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    return {
+        "router": dense_init(ks[0], d, E),
+        "wg": jax.random.normal(ks[1], (E, d, f)) * s,
+        "wu": jax.random.normal(ks[2], (E, d, f)) * s,
+        "wd": jax.random.normal(ks[3], (E, f, d)) * f**-0.5,
+    }
+
+
+def moe_block(p, x, cfg):
+    """Token-choice top-k MoE with static capacity (drop overflow).
+
+    x (T, d) -> (T, d).  aux: load-balancing loss term.
+
+    With a mesh installed (shard_ctx) and experts divisible by the data
+    axis, dispatch runs expert-parallel via shard_map + all_to_all
+    (moe_ep.py) — the jit-level scatter otherwise costs a full-buffer
+    all-reduce per layer."""
+    from repro.models import shard_ctx as _ctx
+
+    if (
+        _ctx._MESH is not None
+        and _ctx._MODE in ("all", "ep")
+        and "data" in _ctx._MESH.axis_names
+        and cfg.moe.n_experts % _ctx._MESH.shape["data"] == 0
+    ):
+        from repro.models.moe_ep import moe_block_ep
+
+        return moe_block_ep(p, x, cfg)
+    T, d = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    C = max(1, int(cfg.moe.capacity_factor * k * T / E))
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eid.reshape(-1)  # (T*k,)
+    onehot = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(T * k), flat_e]
+    slot = flat_e * C + rank
+    valid = rank < C
+    slot = jnp.where(valid, slot, E * C)  # out-of-range -> dropped
+
+    xr = jnp.repeat(x, k, axis=0)  # (T*k, d)
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].add(xr, mode="drop")
+    eb = constrain(buf.reshape(E, C, d), "ecd")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["wg"].astype(x.dtype)))
+    h = constrain(h * jnp.einsum("ecd,edf->ecf", eb, p["wu"].astype(x.dtype)), "ecf")
+    ob = constrain(
+        jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(x.dtype)), "ecd"
+    ).reshape(E * C, d)
+    y = jnp.where(valid[:, None], ob[jnp.clip(slot, 0, E * C - 1)], 0.0)
+    y = y * gate.reshape(-1)[:, None].astype(y.dtype)
+    y = y.reshape(T, k, d).sum(axis=1)
+
+    # load-balance aux (Switch): E * Σ_e fraction_e * mean_prob_e
+    frac = jnp.mean((onehot > 0).astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+    return y, aux
+
+
+# ---------------------------------------------------------------- loss
+
+
+def chunked_softmax_xent(h, w_head, labels, chunk=512):
+    """Cross-entropy over a huge vocab without materializing (B,S,V).
+
+    h (B,S,d) bf16, w_head (d,V), labels (B,S) int32 -> mean nll (f32)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def step(tot, inp):
+        hc, lc = inp
+        logits = constrain((hc @ w_head.astype(hc.dtype)).astype(jnp.float32), "btf")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ls))
+    return tot / (B * S)

@@ -1,0 +1,553 @@
+"""Model assembly: every assigned architecture behind one interface.
+
+``Model(cfg)`` exposes:
+* ``init(key)``            — parameter pytree (layers stacked for lax.scan)
+* ``loss(params, batch)``  — causal-LM loss (chunked vocab xent, remat'd
+                             scan over layers) + MoE aux
+* ``prefill(params, batch)``      — forward returning (last logits, cache)
+* ``decode_step(params, cache, tokens, pos)`` — one-token serve step
+* ``init_cache(B, S)``     — zeroed cache pytree (KV / SSM state)
+* ``input_specs(shape)``   — ShapeDtypeStructs for the dry-run
+
+Families: decoder-only (dense / moe / vlm), rwkv6 (ssm), zamba2 (hybrid:
+Mamba2 backbone + one shared attention block every ``shared_period``
+layers), whisper (audio enc-dec; stub frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.shard_ctx import constrain
+from repro.models.config import ModelConfig, ShapeConfig
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def _stack_init(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _sinusoid(S_len, d, offset=0):
+    pos = np.arange(offset, offset + S_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    out = np.zeros((S_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def _sinusoid_at(pos, d):
+    """Single (traced) position -> (1, d) sinusoidal embedding."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = jnp.asarray(pos, jnp.float32) / (10000 ** (dim / d))
+    out = jnp.zeros((1, d), jnp.float32)
+    out = out.at[0, 0::2].set(jnp.sin(ang)).at[0, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ================================================================ blocks
+
+
+def init_decoder_layer(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.moe:
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp_swiglu(k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def decoder_layer_train(p, x, cfg, cos, sin):
+    # (btdg gather-point constraint tried and refuted — §Perf iteration 5)
+    h = L.attention_train(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg, cos, sin)
+    x = x + h
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        B, Sq, d = h2.shape
+        y, aux = L.moe_block(p["moe"], h2.reshape(B * Sq, d), cfg)
+        return x + y.reshape(B, Sq, d), aux
+    return x + L.mlp_swiglu(p["mlp"], h2), jnp.zeros((), jnp.float32)
+
+
+def decoder_layer_decode(p, x, cache, pos, cfg, cos, sin):
+    h, cache = L.attention_decode(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache, pos, cfg, cos, sin
+    )
+    x = x + h
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        B, Sq, d = h2.shape
+        y, _ = L.moe_block(p["moe"], h2.reshape(B * Sq, d), cfg)
+        return x + y.reshape(B, Sq, d), cache
+    return x + L.mlp_swiglu(p["mlp"], h2), cache
+
+
+# ================================================================ Model
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        kE, kL, kH, kS = jax.random.split(key, 4)
+        d = cfg.d_model
+        params: dict = {
+            "embed": jax.random.normal(kE, (cfg.vocab, d)) * d**-0.5,
+            "final_norm": L.rmsnorm_init(d),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(kH, (d, cfg.vocab)) * d**-0.5
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["layers"] = _stack_init(
+                kL, cfg.n_layers, lambda k: init_decoder_layer(k, cfg)
+            )
+        elif cfg.family == "ssm":
+            params["layers"] = _stack_init(
+                kL, cfg.n_layers, lambda k: S.init_rwkv6_block(k, cfg)
+            )
+        elif cfg.family == "hybrid":
+            groups = cfg.n_layers // cfg.shared_period
+            params["layers"] = _stack_init(
+                kL,
+                cfg.n_layers,
+                lambda k: S.init_mamba2_block(k, cfg),
+            )
+            params["layers"] = jax.tree.map(
+                lambda a: a.reshape((groups, cfg.shared_period) + a.shape[1:]),
+                params["layers"],
+            )
+            params["shared"] = init_decoder_layer(kS, cfg)
+        elif cfg.family == "audio":
+            k_enc, k_dec, k_x = jax.random.split(kL, 3)
+            params["enc_layers"] = _stack_init(
+                k_enc, cfg.enc_layers, lambda k: self._init_whisper_layer(k, cross=False)
+            )
+            params["layers"] = _stack_init(
+                k_dec, cfg.n_layers, lambda k: self._init_whisper_layer(k, cross=True)
+            )
+            params["enc_norm"] = L.layernorm_init(d)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    def _init_whisper_layer(self, key, cross: bool):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "ln1": L.layernorm_init(cfg.d_model),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "mlp": L.init_mlp_gelu(k2, cfg.d_model, cfg.d_ff),
+        }
+        if cross:
+            p["lnx"] = L.layernorm_init(cfg.d_model)
+            p["xattn"] = L.init_attention(k3, cfg)
+        return p
+
+    # ----------------------------------------------------------- helpers
+    def _lm_head(self, params):
+        return (
+            params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        )
+
+    def _positions(self, B, S_len, offset=0):
+        cfg = self.cfg
+        pos = jnp.arange(offset, offset + S_len)[None, :].astype(jnp.int32)
+        pos = jnp.broadcast_to(pos, (B, S_len))
+        if cfg.mrope_sections:
+            # stub M-RoPE streams: patches on a 16-wide grid, text linear
+            P = cfg.vision_patches
+            w = 16
+            t = jnp.where(pos < P, 0, pos - P + 1)
+            h = jnp.where(pos < P, pos // w, pos - P + 1)
+            ww = jnp.where(pos < P, pos % w, pos - P + 1)
+            return jnp.stack([t, h, ww], axis=-1)  # (B, S, 3)
+        return pos
+
+    def _rope(self, pos):
+        return L.rope_angles(pos, self.cfg.hd, self.cfg.rope_theta,
+                             self.cfg.mrope_sections)
+
+    # ----------------------------------------------------------- train
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self._loss_whisper(params, batch)
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S_len = tokens.shape
+        x = constrain(params["embed"].astype(ACT_DTYPE)[tokens], "btd")
+        n_prefix = 0
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(ACT_DTYPE)  # (B, P, d)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        total = x.shape[1]
+        cos, sin = self._rope(self._positions(B, total))
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, lp):
+                h, aux = carry
+                h, a = decoder_layer_train(lp, h, cfg, cos, sin)
+                return (h, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)),
+                params["layers"],
+            )
+        elif cfg.family == "ssm":
+            def body(h, lp):
+                h, _ = S.rwkv6_block(lp, h, cfg)
+                return h, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+
+            def group(h, gp):
+                def inner(h2, lp):
+                    h2, _ = S.mamba2_block(lp, h2, cfg)
+                    return h2, None
+
+                h, _ = jax.lax.scan(inner, h, gp)
+                h, _ = decoder_layer_train(shared, h, cfg, cos, sin)
+                return h, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(group), x, params["layers"])
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        nll = L.chunked_softmax_xent(x, self._lm_head(params), labels)
+        return nll + 0.01 * aux
+
+    def _loss_whisper(self, params, batch):
+        cfg = self.cfg
+        frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+        B, S_len = tokens.shape
+        mem = self._encode(params, frames)
+        x = params["embed"].astype(ACT_DTYPE)[tokens]
+        x = x + _sinusoid(S_len, cfg.d_model).astype(ACT_DTYPE)
+        cos = sin = None
+
+        def body(h, lp):
+            h = self._whisper_decoder_layer(lp, h, mem, causal=True)
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return L.chunked_softmax_xent(x, self._lm_head(params), labels)
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(ACT_DTYPE) + _sinusoid(frames.shape[1], cfg.d_model).astype(
+            ACT_DTYPE
+        )
+
+        def body(h, lp):
+            a = L.attention_train(
+                lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cfg,
+                None, None, rope=False, causal=False,
+            )
+            h = h + a
+            h = h + L.mlp_gelu(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+        return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def _whisper_decoder_layer(self, lp, h, mem, causal, cache=None, pos=None):
+        """mem: raw encoder output (B,M,d) — k/v projected here — or a
+        dict of precomputed {'k','v'} (decode path reuses the cache)."""
+        cfg = self.cfg
+        if cache is None:
+            a = L.attention_train(
+                lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cfg,
+                None, None, rope=False, causal=causal,
+            )
+            h = h + a
+        else:
+            a, cache = L.attention_decode(
+                lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cache, pos,
+                cfg, None, None, rope=False,
+            )
+            h = h + a
+        B = h.shape[0]
+        if isinstance(mem, dict):
+            mk, mv = mem["k"], mem["v"]
+        else:
+            M = mem.shape[1]
+            mk = L.linear(lp["xattn"]["wk"], mem).reshape(B, M, cfg.n_kv, cfg.hd)
+            mv = L.linear(lp["xattn"]["wv"], mem).reshape(B, M, cfg.n_kv, cfg.hd)
+        xh = L.layernorm(lp["lnx"], h, cfg.norm_eps)
+        Sq = xh.shape[1]
+        q = L.linear(lp["xattn"]["wq"], xh).reshape(B, Sq, cfg.nh_eff, cfg.hd)
+        o = L.flash_attention(q, mk, mv, causal=False)
+        h = h + L.linear(lp["xattn"]["wo"], o.reshape(B, Sq, -1))
+        h = h + L.mlp_gelu(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+        return (h, cache) if cache is not None else h
+
+    # ----------------------------------------------------------- serve
+    def init_cache(self, B, S_len, dtype=ACT_DTYPE):
+        cfg = self.cfg
+        nkv, hd, Lz = cfg.n_kv, cfg.hd, cfg.n_layers
+        if cfg.family in ("dense", "moe", "vlm"):
+            return {
+                "k": jnp.zeros((Lz, B, S_len, nkv, hd), dtype),
+                "v": jnp.zeros((Lz, B, S_len, nkv, hd), dtype),
+            }
+        if cfg.family == "ssm":
+            return {
+                "wkv": jnp.zeros((Lz, B, cfg.n_heads, hd, hd), jnp.float32),
+                "x_tm": jnp.zeros((Lz, B, cfg.d_model), dtype),
+                "x_cm": jnp.zeros((Lz, B, cfg.d_model), dtype),
+            }
+        if cfg.family == "hybrid":
+            ssm = cfg.ssm
+            groups = Lz // cfg.shared_period
+            inner = ssm.expand * cfg.d_model
+            nh = ssm.n_heads or max(1, inner // 64)
+            return {
+                "ssm": jnp.zeros(
+                    (groups, cfg.shared_period, B, nh, inner // nh, ssm.d_state),
+                    jnp.float32,
+                ),
+                "conv": jnp.zeros(
+                    (groups, cfg.shared_period, B, ssm.conv_kernel - 1,
+                     inner + 2 * ssm.d_state), dtype,
+                ),
+                "k": jnp.zeros((groups, B, S_len, nkv, hd), dtype),
+                "v": jnp.zeros((groups, B, S_len, nkv, hd), dtype),
+            }
+        if cfg.family == "audio":
+            return {
+                "k": jnp.zeros((Lz, B, S_len, nkv, hd), dtype),
+                "v": jnp.zeros((Lz, B, S_len, nkv, hd), dtype),
+                "mem_k": jnp.zeros((Lz, B, cfg.n_audio_ctx, nkv, hd), dtype),
+                "mem_v": jnp.zeros((Lz, B, cfg.n_audio_ctx, nkv, hd), dtype),
+            }
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B, 1); pos scalar int32 (same position across batch)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"].astype(ACT_DTYPE)[tokens]
+        if cfg.family == "audio":
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(ACT_DTYPE)
+        # positions at `pos` (traced scalar): build directly
+        p1 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        if cfg.mrope_sections:
+            pos3 = jnp.stack([p1, p1, p1], axis=-1)
+            cos, sin = self._rope(pos3)
+        else:
+            cos, sin = self._rope(p1)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(h, inp):
+                lp, ck, cv = inp
+                h, c2 = decoder_layer_decode(lp, h, {"k": ck, "v": cv}, pos, cfg, cos, sin)
+                return h, (c2["k"], c2["v"])
+
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"])
+            )
+            new_cache = {"k": nk, "v": nv}
+        elif cfg.family == "ssm":
+            def body(h, inp):
+                lp, wkv, xtm, xcm = inp
+                st = {"wkv": wkv, "x_tm": xtm, "x_cm": xcm}
+                h, st2 = S.rwkv6_block(lp, h, cfg, st)
+                return h, (st2["wkv"], st2["x_tm"].astype(xtm.dtype),
+                           st2["x_cm"].astype(xcm.dtype))
+
+            x, (wkv, xtm, xcm) = jax.lax.scan(
+                body, x, (params["layers"], cache["wkv"], cache["x_tm"], cache["x_cm"])
+            )
+            new_cache = {"wkv": wkv, "x_tm": xtm, "x_cm": xcm}
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+
+            def group(h, inp):
+                gp, s_ssm, s_conv, ck, cv = inp
+
+                def inner(h2, li):
+                    lp, st_s, st_c = li
+                    h2, st2 = S.mamba2_block(lp, h2, cfg, {"ssm": st_s, "conv": st_c})
+                    return h2, (st2["ssm"], st2["conv"].astype(st_c.dtype))
+
+                h, (ns, ncv) = jax.lax.scan(inner, h, (gp, s_ssm, s_conv))
+                h, c2 = decoder_layer_decode(
+                    shared, h, {"k": ck, "v": cv}, pos, cfg, cos, sin
+                )
+                return h, (ns, ncv, c2["k"], c2["v"])
+
+            x, (ns, ncv, nk, nv) = jax.lax.scan(
+                group, x,
+                (params["layers"], cache["ssm"], cache["conv"], cache["k"], cache["v"]),
+            )
+            new_cache = {"ssm": ns, "conv": ncv, "k": nk, "v": nv}
+        elif cfg.family == "audio":
+            def body(h, inp):
+                lp, ck, cv, mk, mv = inp
+                h, c2 = self._whisper_decoder_layer(
+                    lp, h, {"k": mk, "v": mv}, causal=True,
+                    cache={"k": ck, "v": cv}, pos=pos,
+                )
+                return h, (c2["k"], c2["v"])
+
+            x, (nk, nv) = jax.lax.scan(
+                body, x,
+                (params["layers"], cache["k"], cache["v"],
+                 cache["mem_k"], cache["mem_v"]),
+            )
+            new_cache = {**cache, "k": nk, "v": nv}
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ self._lm_head(params).astype(x.dtype)).astype(jnp.float32)
+        return logits, new_cache
+
+    def prefill(self, params, batch):
+        """Forward over a full prompt producing last-position logits + the
+        populated KV cache (attention families).  SSM/hybrid prefill reuses
+        the train path's chunked scan and emits the recurrent state."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_len = tokens.shape
+        x = params["embed"].astype(ACT_DTYPE)[tokens]
+        if cfg.family == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(ACT_DTYPE), x], axis=1)
+        total = x.shape[1]
+        cos, sin = self._rope(self._positions(B, total))
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(h, lp):
+                hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                q, k, v = L._qkv(lp["attn"], hn, cfg, cos, sin)
+                o = L.flash_attention(q, k, v, causal=True)
+                h = h + L.linear(lp["attn"]["wo"], o.reshape(B, total, -1))
+                h2 = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                if cfg.moe:
+                    y, _ = L.moe_block(lp["moe"], h2.reshape(B * total, -1), cfg)
+                    h = h + y.reshape(B, total, -1)
+                else:
+                    h = h + L.mlp_swiglu(lp["mlp"], h2)
+                return h, (k, v)
+
+            x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+            cache = {"k": ks, "v": vs}
+        elif cfg.family == "ssm":
+            def body(h, lp):
+                h, st = S.rwkv6_block(lp, h, cfg)
+                return h, (st["wkv"], st["x_tm"], st["x_cm"])
+
+            x, (wkv, xtm, xcm) = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+            cache = {"wkv": wkv, "x_tm": xtm, "x_cm": xcm}
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+
+            def group(h, gp):
+                def inner(h2, lp):
+                    h2, st = S.mamba2_block(lp, h2, cfg)
+                    return h2, (st["ssm"], st["conv"])
+
+                h, (ns, ncv) = jax.lax.scan(inner, h, gp)
+                hn = L.rmsnorm(shared["ln1"], h, cfg.norm_eps)
+                q, k, v = L._qkv(shared["attn"], hn, cfg, cos, sin)
+                o = L.flash_attention(q, k, v, causal=True)
+                h = h + L.linear(shared["attn"]["wo"], o.reshape(B, total, -1))
+                h2 = L.rmsnorm(shared["ln2"], h, cfg.norm_eps)
+                h = h + L.mlp_swiglu(shared["mlp"], h2)
+                return h, (ns, ncv, k, v)
+
+            x, (ns, ncv, ks, vs) = jax.lax.scan(
+                jax.checkpoint(group), x, params["layers"]
+            )
+            cache = {"ssm": ns, "conv": ncv, "k": ks, "v": vs}
+        elif cfg.family == "audio":
+            mem = self._encode(params, batch["frames"])
+            nkv, hd = cfg.n_kv, cfg.hd
+
+            def body(h, lp):
+                hn = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+                q, k, v = L._qkv(lp["attn"], hn, cfg, None, None, rope=False)
+                o = L.flash_attention(q, k, v, causal=True)
+                h = h + L.linear(lp["attn"]["wo"], o.reshape(B, total, -1))
+                mk = L.linear(lp["xattn"]["wk"], mem).reshape(B, -1, nkv, hd)
+                mv = L.linear(lp["xattn"]["wv"], mem).reshape(B, -1, nkv, hd)
+                xh = L.layernorm(lp["lnx"], h, cfg.norm_eps)
+                q2 = L.linear(lp["xattn"]["wq"], xh).reshape(B, total, cfg.nh_eff, hd)
+                o2 = L.flash_attention(q2, mk, mv, causal=False)
+                h = h + L.linear(lp["xattn"]["wo"], o2.reshape(B, total, -1))
+                h = h + L.mlp_gelu(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+                return h, (k, v, mk, mv)
+
+            x = x + _sinusoid(total, cfg.d_model).astype(ACT_DTYPE)
+            x, (ks, vs, mks, mvs) = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+            cache = {"k": ks, "v": vs, "mem_k": mks, "mem_v": mvs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        logits = (x @ self._lm_head(params).astype(x.dtype)).astype(jnp.float32)
+        return logits, cache
+
+    # ----------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        B, S_len = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S_len), jnp.int32)
+        if shape.kind == "train":
+            specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S_len), jnp.int32)}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_patches, cfg.d_model), ACT_DTYPE
+                )
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_audio_ctx, cfg.d_model), ACT_DTYPE
+                )
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": tok}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_patches, cfg.d_model), ACT_DTYPE
+                )
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_audio_ctx, cfg.d_model), ACT_DTYPE
+                )
+            return specs
+        # decode: one new token against a seq_len cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": jax.eval_shape(lambda: self.init_cache(B, S_len)),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

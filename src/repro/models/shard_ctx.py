@@ -1,0 +1,74 @@
+"""Activation-sharding context.
+
+GSPMD resolves operand sharding conflicts heuristically; with FSDP
+weights (d-dim over ``data``) + TP (ffn/head dim over ``model``) it can
+choose to all-gather *activations* (GiBs per layer) instead of *weights*
+(MiBs).  Production frameworks pin the decision with explicit
+``with_sharding_constraint`` on activations — this module provides those
+constraints without coupling model code to a mesh: the launcher installs
+a mesh (``set_mesh``); on a bare CPU run every constraint is a no-op.
+
+EXPERIMENTS.md §Perf measures the before/after of exactly this.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+_MODE: str = "all"  # all | attn | mlp | sp (sequence-parallel residuals)
+
+
+def set_mesh(mesh: Mesh | None, mode: str = "all") -> None:
+    global _MESH, _MODE
+    _MESH = mesh
+    _MODE = mode
+
+
+def constrain(x, kind: str):
+    """kinds: 'btd' (batch, seq, d_model) | 'btf' (ffn hidden) |
+    'bthd' (batch, seq, heads, head_dim) | 'expert' (E, C, d) buffers."""
+    if _MESH is None:
+        return x
+    if _MODE == "ep":
+        return x  # only the shard_map expert-parallel MoE path is active
+    if _MODE == "attn" and kind in ("btd", "btdg", "btf", "td", "ecd", "ecf"):
+        return x
+    if _MODE == "mlp" and kind in ("bthd", "bthd_rep"):
+        return x
+    names = _MESH.axis_names
+    dp_axes = tuple(a for a in names if a in ("pod", "data"))
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    tp = "model" if "model" in names else None
+    tp_size = _MESH.shape.get("model", 1)
+    if kind == "btd":
+        # sp: Megatron sequence parallelism — the residual stream (and
+        # with it the per-layer remat stack) shards its SEQUENCE over the
+        # TP axis; projections all-gather S and reduce-scatter back.
+        if _MODE == "sp" and x.shape[1] % tp_size == 0:
+            spec = P(dp, tp, None)
+        else:
+            spec = P(dp, None, None)
+    elif kind == "btdg":
+        # norm output feeding a TP projection: force the sequence
+        # all-gather HERE (bf16, post-norm) instead of letting GSPMD
+        # gather the f32 pre-norm tensor
+        spec = P(dp, None, None)
+    elif kind == "btf":
+        spec = P(dp, None, tp if x.shape[-1] % tp_size == 0 else None)
+    elif kind == "bthd":
+        ok = x.shape[2] % tp_size == 0
+        spec = P(dp, None, tp if ok else None, None)
+    elif kind == "bthd_rep":
+        spec = P(dp, None, None, None)
+    elif kind == "td":  # flattened tokens (T, d)
+        spec = P(dp, None)
+    elif kind == "ecd":  # MoE dispatch buffer (E, C, d): expert-parallel
+        spec = P("data" if "data" in names else None, None, None)
+    elif kind == "ecf":  # MoE expert hidden (E, C, f): EP + TP
+        spec = P("data" if "data" in names else None, None, tp)
+    else:
+        raise ValueError(kind)
+    if x.ndim != len(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,245 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are linear-recurrence layers computed with the chunked-parallel
+algorithm (intra-chunk matmuls + cross-chunk state scan) — the TPU-native
+form: MXU matmuls per chunk instead of a length-T pointer recurrence.
+
+RWKV6 state: per head an (hd × hd) matrix, per-channel data-dependent
+decay (the Finch contribution).  Mamba2 state: per head (hd × d_state)
+with a per-head scalar decay.  Decode steps update the state one token at
+a time (O(1) in sequence length — why these archs own the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_linear, linear, rmsnorm, rmsnorm_init
+
+# ---------------------------------------------------------------- RWKV6
+
+
+def init_rwkv6_block(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    nh, hd = cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 16)
+    return {
+        "ln1": rmsnorm_init(d),
+        "ln2": rmsnorm_init(d),
+        "mix": {
+            "mu": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,w,g token-shift
+            "wr": init_linear(ks[0], d, nh * hd),
+            "wk": init_linear(ks[1], d, nh * hd),
+            "wv": init_linear(ks[2], d, nh * hd),
+            "wg": init_linear(ks[3], d, nh * hd),
+            "w0": jnp.full((nh * hd,), -6.0, jnp.float32),  # base log-decay
+            "wa": dense_init(ks[4], d, lora, scale=0.01),
+            "wb": dense_init(ks[5], lora, nh * hd, scale=0.01),
+            "u": jnp.zeros((nh, hd), jnp.float32),  # bonus for current token
+            "wo": init_linear(ks[6], nh * hd, d),
+            "gn": rmsnorm_init(hd),
+        },
+        "cmix": {
+            "mu": jnp.full((2, d), 0.5, jnp.float32),
+            "wk": init_linear(ks[7], d, f),
+            "wv": init_linear(ks[8], f, d),
+            "wr": init_linear(ks[9], d, d),
+        },
+    }
+
+
+def _token_shift(x, x_prev):
+    """shift right by one along S; first position mixes with x_prev."""
+    pad = x_prev[:, None, :] if x_prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _rwkv6_rkvwg(p, x, x_prev, cfg):
+    B, S, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    feats = [x + (xs - x) * mu[i] for i in range(5)]
+    r = linear(p["wr"], feats[0]).reshape(B, S, nh, hd)
+    k = linear(p["wk"], feats[1]).reshape(B, S, nh, hd)
+    v = linear(p["wv"], feats[2]).reshape(B, S, nh, hd)
+    # data-dependent per-channel decay (Finch): w = exp(-exp(w0 + lora))
+    wlog = p["w0"] + (feats[3] @ p["wa"]) @ p["wb"]
+    w = -jnp.exp(jnp.clip(wlog.astype(jnp.float32), -12.0, 1.0))  # log decay < 0
+    # clamp so chunk_len * |w| stays below f32 exp overflow (see wkv6_chunked)
+    w = jnp.clip(w, -5.0, -1e-5).reshape(B, S, nh, hd)
+    g = jax.nn.silu(linear(p["wg"], feats[4])).reshape(B, S, nh, hd)
+    return r, k, v, w, g
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk):
+    """Chunked linear recurrence.  All (B,S,nh,hd); w = per-channel log
+    decay (<0); u = current-token bonus (nh,hd); state (B,nh,hd,hd)
+    [k-dim × v-dim].  Returns (y, new_state)."""
+    B, S, nh, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    rc = jnp.moveaxis(r.reshape(B, nc, chunk, nh, hd), 1, 0).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, nh, hd), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, nh, hd), 1, 0).astype(jnp.float32)
+    wc = jnp.moveaxis(w.reshape(B, nc, chunk, nh, hd), 1, 0)
+
+    def step(S0, inp):
+        rr, kk, vv, ww = inp  # (B, C, nh, hd)
+        cw = jnp.cumsum(ww, axis=1)  # inclusive cumulative log decay
+        cw_prev = cw - ww  # exclusive (decay applied before step t)
+        r_dec = rr * jnp.exp(cw_prev)  # r_t ⊙ Π_{s<t} decay
+        k_dec = kk * jnp.exp(-cw)  # k_s ⊘ Π_{s<=s} decay
+        # intra-chunk scores: s<t strictly
+        scores = jnp.einsum("btnh,bsnh->bnts", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = jnp.einsum("bnts,bsnh->btnh", scores, vv)
+        # current-token bonus: y_t += (r_t · (u ⊙ k_t)) v_t
+        y = y + (rr * kk * u).sum(-1, keepdims=True) * vv
+        # cross-chunk contribution from carried state
+        y = y + jnp.einsum("btnk,bnkh->btnh", r_dec, S0)
+        # state update to end of chunk
+        decay_to_end = jnp.exp(cw[:, -1:] - cw)  # (B, C, nh, hd) k-dim decay
+        S1 = S0 * jnp.exp(cw[:, -1])[..., None] + jnp.einsum(
+            "btnk,btnh->bnkh", kk * decay_to_end, vv
+        )
+        return S1, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    return y.astype(r.dtype), state
+
+
+def rwkv6_block(p, x, cfg, state=None):
+    """Full block: time-mix + channel-mix.  state: dict with 'wkv'
+    (B,nh,hd,hd), 'x_tm', 'x_cm' (B,d) shift carries — None for training
+    (zero-init, sequence assumed to start at position 0)."""
+    B, S, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    st = state or {
+        "wkv": jnp.zeros((B, nh, hd, hd), jnp.float32),
+        "x_tm": None,
+        "x_cm": None,
+    }
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    r, k, v, w, g = _rwkv6_rkvwg(p["mix"], h, st["x_tm"], cfg)
+    u = p["mix"]["u"].astype(jnp.float32)
+    y, wkv = wkv6_chunked(r, k, v, w, u, st["wkv"], cfg.ssm.chunk if cfg.ssm else 128)
+    y = rmsnorm(p["mix"]["gn"], y, cfg.norm_eps) * g
+    x = x + linear(p["mix"]["wo"], y.reshape(B, S, nh * hd))
+
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    hs = _token_shift(h2, st["x_cm"])
+    mu = p["cmix"]["mu"].astype(x.dtype)
+    xk = h2 + (hs - h2) * mu[0]
+    xr = h2 + (hs - h2) * mu[1]
+    kk = jnp.square(jax.nn.relu(linear(p["cmix"]["wk"], xk)))
+    out = jax.nn.sigmoid(linear(p["cmix"]["wr"], xr)) * linear(p["cmix"]["wv"], kk)
+    x = x + out
+    new_state = {"wkv": wkv, "x_tm": h[:, -1], "x_cm": h2[:, -1]}
+    return x, new_state
+
+
+# ---------------------------------------------------------------- Mamba2
+
+
+def init_mamba2_block(key, cfg):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    nh = ssm.n_heads or max(1, inner // 64)
+    hd = inner // nh
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": rmsnorm_init(d),
+        "in_proj": init_linear(ks[0], d, 2 * inner + 2 * ssm.d_state + nh),
+        "conv_w": jax.random.normal(ks[1], (ssm.conv_kernel, inner + 2 * ssm.d_state))
+        * 0.1,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gn": rmsnorm_init(hd),
+        "out_proj": init_linear(ks[2], inner, d),
+    }
+
+
+def _causal_conv(x, w, carry=None):
+    """Depthwise causal conv, kernel K: y_t = Σ_i w_i x_{t-K+1+i}.
+
+    carry (B, K-1, C) holds the previous tokens for decode/chunk reuse."""
+    K = w.shape[0]
+    pad = (
+        carry
+        if carry is not None
+        else jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu(y), xp[:, -(K - 1):]
+
+
+def mamba2_mix(p, h, cfg, state):
+    """SSD core on pre-normed input h (B,S,d). state: dict(ssm, conv)."""
+    B, S, d = h.shape
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    nh = ssm.n_heads or max(1, inner // 64)
+    hd = inner // nh
+    N = ssm.d_state
+
+    zxbcdt = linear(p["in_proj"], h)
+    z, xbc, dt = jnp.split(zxbcdt, [inner, 2 * inner + 2 * N], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], state.get("conv"))
+    x, Bm, Cm = jnp.split(xbc, [inner, inner + N], axis=-1)
+    x = x.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,) negative
+    loga = dt * A  # (B,S,nh) log decay per head
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    chunk = min(ssm.chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    mv = lambda t: jnp.moveaxis(t.reshape((B, nc, chunk) + t.shape[2:]), 1, 0)
+    xc, bc, cc, lc = mv(xdt), mv(Bm.astype(jnp.float32)), mv(Cm.astype(jnp.float32)), mv(loga)
+
+    def step(S0, inp):
+        xx, bb, ccur, ll = inp  # xx (B,C,nh,hd), bb/ccur (B,C,N), ll (B,C,nh)
+        ca = jnp.cumsum(ll, axis=1)
+        ca_prev = ca - ll
+        # intra-chunk: y_t = Σ_{s<=t} (C_t·B_s) exp(ca_t - ca_s) x_s dt_s
+        scores = jnp.einsum("btn,bsn->bts", ccur, bb)[:, None] * jnp.exp(
+            ca.transpose(0, 2, 1)[:, :, :, None] - ca.transpose(0, 2, 1)[:, :, None, :]
+        )  # (B, nh, t, s)
+        mask = jnp.tril(jnp.ones((xx.shape[1], xx.shape[1]), bool))
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = jnp.einsum("bhts,bshd->bthd", scores, xx)
+        # cross-chunk from carried state S0 (B, nh, hd, N)
+        cdec = jnp.exp(ca)  # decay from chunk start to t (inclusive)
+        y = y + jnp.einsum("btn,bhdn,bth->bthd", ccur, S0, cdec)
+        # state update
+        dec_end = jnp.exp(ca[:, -1:] - ca)  # (B, C, nh)
+        S1 = S0 * jnp.exp(ca[:, -1])[:, :, None, None] + jnp.einsum(
+            "bthd,btn,bth->bhdn", xx, bb, dec_end
+        )
+        return S1, y
+
+    S0 = state.get("ssm")
+    if S0 is None:
+        S0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    S1, ys = jax.lax.scan(step, S0.astype(jnp.float32), (xc, bc, cc, lc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = rmsnorm(p["gn"], y.astype(h.dtype), cfg.norm_eps)
+    y = (y * jax.nn.silu(z).reshape(B, S, nh, hd)).reshape(B, S, inner)
+    out = linear(p["out_proj"], y)
+    return out, {"ssm": S1, "conv": conv_state}
+
+
+def mamba2_block(p, x, cfg, state=None):
+    st = state or {}
+    out, new_state = mamba2_mix(p, rmsnorm(p["ln"], x, cfg.norm_eps), cfg, st)
+    return x + out, new_state

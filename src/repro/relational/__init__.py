@@ -1,0 +1,4 @@
+from repro.relational.relation import Relation, Database
+from repro.relational.encoding import Dictionary, build_dictionaries, encode_relation
+
+__all__ = ["Relation", "Database", "Dictionary", "build_dictionaries", "encode_relation"]

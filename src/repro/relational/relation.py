@@ -1,0 +1,82 @@
+"""Columnar relations — the framework's minimal storage substrate.
+
+The paper's prototype reads sorted tuples out of PostgreSQL over JDBC;
+here a :class:`Relation` is a dict of equal-length numpy columns and a
+:class:`Database` is a named collection of them.  Loading, projection and
+bag-semantics duplicate handling (the paper's load-time *pre-aggregation*,
+Section III-E) all operate on these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+import numpy as np
+
+
+@dataclass
+class Relation:
+    """A named bag of tuples stored column-wise."""
+
+    name: str
+    columns: dict[str, np.ndarray]
+
+    def __post_init__(self) -> None:
+        lengths = {len(col) for col in self.columns.values()}
+        if len(lengths) > 1:
+            raise ValueError(f"relation {self.name!r}: ragged columns {lengths}")
+        self.columns = {a: np.asarray(c) for a, c in self.columns.items()}
+
+    @property
+    def attrs(self) -> tuple[str, ...]:
+        return tuple(self.columns)
+
+    @property
+    def num_rows(self) -> int:
+        if not self.columns:
+            return 0
+        return len(next(iter(self.columns.values())))
+
+    def project(self, attrs: Iterable[str]) -> "Relation":
+        """Bag-semantics projection (no duplicate elimination)."""
+        attrs = tuple(attrs)
+        missing = set(attrs) - set(self.columns)
+        if missing:
+            raise KeyError(f"relation {self.name!r} has no attrs {sorted(missing)}")
+        return Relation(self.name, {a: self.columns[a] for a in attrs})
+
+    def rows(self) -> np.ndarray:
+        """Row-major (n, k) view over the columns, in attr order."""
+        return np.stack([self.columns[a] for a in self.attrs], axis=1)
+
+    @staticmethod
+    def from_rows(name: str, attrs: Iterable[str], rows: np.ndarray) -> "Relation":
+        attrs = tuple(attrs)
+        rows = np.asarray(rows)
+        if rows.ndim != 2 or rows.shape[1] != len(attrs):
+            raise ValueError(f"rows shape {rows.shape} != (n, {len(attrs)})")
+        return Relation(name, {a: rows[:, i] for i, a in enumerate(attrs)})
+
+
+@dataclass
+class Database:
+    """A named collection of relations."""
+
+    relations: dict[str, Relation] = field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> Relation:
+        return self.relations[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.relations
+
+    def add(self, rel: Relation) -> "Database":
+        self.relations[rel.name] = rel
+        return self
+
+    @staticmethod
+    def from_mapping(mapping: Mapping[str, Mapping[str, np.ndarray]]) -> "Database":
+        db = Database()
+        for name, cols in mapping.items():
+            db.add(Relation(name, dict(cols)))
+        return db

@@ -1,0 +1,24 @@
+"""One real dry-run cell end-to-end in a subprocess (512 virtual devices
+must be set before jax init).  The full 80-cell sweep is
+``python -m repro.launch.dryrun --all``; this keeps CI-fast coverage."""
+import json
+import os
+import subprocess
+import sys
+
+
+def test_one_cell_lowers_and_compiles(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2-1.5b", "--shape", "decode_32k", "--mesh", "multi",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=".", timeout=560,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.load(open(tmp_path / "qwen2-1.5b__decode_32k__multi.json"))
+    assert rec["status"] == "ok", rec
+    assert rec["dot_flops"] > 1e9
+    assert rec["memory"]["temp_size_in_bytes"] < 14e9  # fits v5e HBM
+    assert rec["collective_bytes"] > 0

@@ -1,0 +1,43 @@
+"""JAX engine (dense einsum + Pallas kernels modes) vs oracle."""
+import numpy as np
+import pytest
+
+from repro.core.jax_engine import execute_jax
+from repro.core.query import JoinAggQuery
+from repro.relational.oracle import oracle_joinagg
+from repro.relational.relation import Database
+
+from tests.test_joinagg_core import CASES, assert_same
+
+
+@pytest.mark.parametrize("case", ["selfjoin", "chain", "chain4g", "branching", "siblings"])
+def test_jax_dense_matches_oracle(case):
+    db, q = CASES[case]()
+    assert_same(execute_jax(q, db, mode="dense"), oracle_joinagg(q, db))
+
+
+@pytest.mark.parametrize("case", ["selfjoin", "chain"])
+def test_jax_kernels_matches_oracle(case):
+    db, q = CASES[case]()
+    assert_same(
+        execute_jax(q, db, mode="kernels", interpret=True), oracle_joinagg(q, db)
+    )
+
+
+def test_jax_sum():
+    rng = np.random.default_rng(3)
+    n, a, b = 120, 5, 6
+    db = Database.from_mapping(
+        {
+            "R1": {"g1": rng.integers(0, a, n), "p": rng.integers(0, b, n)},
+            "R2": {
+                "p": rng.integers(0, b, n),
+                "g2": rng.integers(0, a, n),
+                "m": rng.integers(0, 10, n),
+            },
+        }
+    )
+    from repro.aggregates.semiring import Sum
+
+    q = JoinAggQuery(("R1", "R2"), (("R1", "g1"), ("R2", "g2")), Sum("R2", "m"))
+    assert_same(execute_jax(q, db, mode="dense"), oracle_joinagg(q, db))

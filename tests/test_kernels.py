@@ -1,0 +1,66 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import coo_spmm, segment_sum, semiring_matmul
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.mark.parametrize("n,d,s", [(100, 8, 16), (513, 128, 130), (64, 256, 7), (1, 8, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum(n, d, s, dtype):
+    data = jnp.asarray(RNG.normal(size=(n, d)), dtype=dtype)
+    ids = jnp.asarray(RNG.integers(0, s, size=n), dtype=jnp.int32)
+    got = segment_sum(data, ids, num_segments=s, block_s=16, block_n=64, interpret=True)
+    want = ref.segment_sum_ref(data, ids, s)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "nnz,m,k,n", [(200, 32, 24, 16), (1000, 130, 257, 128), (5, 8, 8, 8)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_coo_spmm(nnz, m, k, n, dtype):
+    rows = jnp.asarray(RNG.integers(0, m, size=nnz), dtype=jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, k, size=nnz), dtype=jnp.int32)
+    vals = jnp.asarray(RNG.integers(1, 5, size=nnz), dtype=dtype)
+    dense = jnp.asarray(RNG.normal(size=(k, n)), dtype=dtype)
+    got = coo_spmm(rows, cols, vals, dense, num_rows=m,
+                   block_m=16, block_e=64, block_k=32, interpret=True)
+    want = ref.coo_spmm_ref(rows, cols, vals, dense, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("semiring", ["add_mul", "max_add", "min_add", "or_and"])
+@pytest.mark.parametrize("m,k,n", [(32, 48, 16), (129, 70, 65)])
+def test_semiring_matmul(semiring, m, k, n):
+    if semiring == "or_and":
+        a = jnp.asarray(RNG.integers(0, 2, size=(m, k)), dtype=jnp.float32)
+        b = jnp.asarray(RNG.integers(0, 2, size=(k, n)), dtype=jnp.float32)
+    else:
+        a = jnp.asarray(RNG.normal(size=(m, k)), dtype=jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(k, n)), dtype=jnp.float32)
+    got = semiring_matmul(a, b, semiring=semiring,
+                          block_m=32, block_n=32, block_k=16, interpret=True)
+    want = ref.semiring_matmul_ref(a, b, semiring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_counts_exact_int_in_f32():
+    """Counts are integral; f32 matmul must be exact below 2^24."""
+    nnz, m, k, n = 300, 20, 20, 12
+    rows = jnp.asarray(RNG.integers(0, m, size=nnz), dtype=jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, k, size=nnz), dtype=jnp.int32)
+    vals = jnp.asarray(RNG.integers(1, 100, size=nnz), dtype=jnp.float32)
+    dense = jnp.asarray(RNG.integers(0, 100, size=(k, n)), dtype=jnp.float32)
+    got = coo_spmm(rows, cols, vals, dense, num_rows=m, interpret=True)
+    want = ref.coo_spmm_ref(rows, cols, vals, dense, m)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

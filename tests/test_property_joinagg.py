@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) on JOIN-AGG system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.operator import join_agg
+from repro.core.query import JoinAggQuery
+from repro.core.ref_engine import execute_ref
+from repro.core.tensor_engine import execute_tensor
+from repro.relational.oracle import oracle_joinagg
+from repro.relational.relation import Database, Relation
+
+SMALL = st.integers(min_value=2, max_value=5)
+
+
+def _rand_chain(draw, n_rels):
+    """Random chain query R1(g1,p0) ⋈ ... ⋈ Rk(p_{k-2}, g2)."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n = draw(st.integers(5, 60))
+    gdom = draw(SMALL)
+    jdom = draw(SMALL)
+    rels = {}
+    names = []
+    for i in range(n_rels):
+        cols = {}
+        if i == 0:
+            cols["g1"] = rng.integers(0, gdom, n)
+        else:
+            cols[f"p{i-1}"] = rng.integers(0, jdom, n)
+        if i == n_rels - 1:
+            cols["g2"] = rng.integers(0, gdom, n)
+        else:
+            cols[f"p{i}"] = rng.integers(0, jdom, n)
+        name = f"R{i}"
+        rels[name] = cols
+        names.append(name)
+    db = Database.from_mapping(rels)
+    q = JoinAggQuery(tuple(names), (("R0", "g1"), (names[-1], "g2")))
+    return db, q
+
+
+@st.composite
+def chain_case(draw):
+    n_rels = draw(st.integers(2, 4))
+    return _rand_chain(draw, n_rels)
+
+
+@st.composite
+def star_case(draw):
+    """Random star: center B(j1..jk) with k group leaves — the branching
+    topology where path-id bookkeeping matters most."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    k = draw(st.integers(2, 4))
+    n = draw(st.integers(5, 40))
+    gdom = draw(SMALL)
+    jdom = draw(SMALL)
+    rels = {"HUB": {f"j{i}": rng.integers(0, jdom, n) for i in range(k)}}
+    group_by = []
+    names = ["HUB"]
+    for i in range(k):
+        rels[f"G{i}"] = {
+            f"j{i}": rng.integers(0, jdom, n),
+            f"g{i}": rng.integers(0, gdom, n),
+        }
+        names.append(f"G{i}")
+        group_by.append((f"G{i}", f"g{i}"))
+    db = Database.from_mapping(rels)
+    return db, JoinAggQuery(tuple(names), tuple(group_by))
+
+
+def _check(db, q):
+    want = oracle_joinagg(q, db)
+    got_t = execute_tensor(q, db)
+    assert got_t == want, "tensor engine diverges from oracle"
+    got_r = execute_ref(q, db)
+    assert got_r == want, "ref engine diverges from oracle"
+
+
+@settings(max_examples=25, deadline=None)
+@given(chain_case())
+def test_random_chains(case):
+    _check(*case)
+
+
+@settings(max_examples=25, deadline=None)
+@given(star_case())
+def test_random_stars(case):
+    _check(*case)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chain_case(), st.integers(1, 4))
+def test_streaming_invariance(case, tile):
+    """Tiling any group axis never changes the result."""
+    db, q = case
+    full = execute_tensor(q, db)
+    assert execute_tensor(q, db, stream=("g2", tile)) == full
+
+
+@settings(max_examples=15, deadline=None)
+@given(chain_case())
+def test_total_count_equals_join_size(case):
+    """Σ group counts == |join result| (COUNT partition invariant)."""
+    db, q = case
+    from repro.relational.oracle import materialize_join
+
+    res = execute_tensor(q, db)
+    joined = materialize_join(q, db)
+    join_size = len(next(iter(joined.values()))) if joined else 0
+    assert sum(res.values()) == join_size
+
+
+@settings(max_examples=15, deadline=None)
+@given(chain_case(), st.integers(0, 30))
+def test_duplicate_row_scales_counts(case, row_seed):
+    """Bag semantics: duplicating one tuple of R0 adds exactly its
+    contribution again (counts are linear in tuple multiplicity)."""
+    db, q = case
+    base = execute_tensor(q, db)
+    r0 = db["R0"]
+    if r0.num_rows == 0:
+        return
+    i = row_seed % r0.num_rows
+    dup_cols = {a: np.concatenate([c, c[i : i + 1]]) for a, c in r0.columns.items()}
+    db2 = Database(dict(db.relations))
+    db2.add(Relation("R0", dup_cols))
+    dup = execute_tensor(q, db2)
+    # every group's count must not decrease, and the total delta equals
+    # the duplicated tuple's original contribution
+    for k, v in base.items():
+        assert dup.get(k, 0) >= v
+    assert sum(dup.values()) >= sum(base.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(star_case())
+def test_relabeling_invariance(case):
+    """Renaming group values permutes keys but preserves count multiset."""
+    db, q = case
+    base = execute_tensor(q, db)
+    shift = {}
+    for rel, attr in q.group_by:
+        cols = dict(db[rel].columns)
+        cols[attr] = cols[attr] + 1000  # injective relabel
+        shift[rel] = cols
+    db2 = Database(dict(db.relations))
+    for rel, cols in shift.items():
+        db2.add(Relation(rel, cols))
+    moved = execute_tensor(q, db2)
+    assert sorted(base.values()) == sorted(moved.values())
