@@ -14,7 +14,7 @@ from benchmarks import tables
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["small", "medium", "paper"], default="small")
-    ap.add_argument("--table", choices=["1", "2", "3", "4", "5", "6"], default=None)
+    ap.add_argument("--table", choices=["1", "2", "3", "4", "5", "6", "7"], default=None)
     ap.add_argument("--no-verify", action="store_true")
     args = ap.parse_args()
 
@@ -22,6 +22,7 @@ def main() -> None:
     n_chain = {"small": 8000, "medium": 40000, "paper": 500000}[args.scale]
     n_branch = {"small": 6000, "medium": 30000, "paper": 500000}[args.scale]
     n_real = {"small": 20000, "medium": 100000, "paper": 500000}[args.scale]
+    n_cyclic = {"small": 4000, "medium": 30000, "paper": 200000}[args.scale]
     verify = not args.no_verify and args.scale == "small"
 
     print("name,us_per_call,derived")
@@ -36,6 +37,8 @@ def main() -> None:
         tables.table5_branching(n_branch, verify)
     if run_all or args.table == "6":
         tables.table6_real(n_real, verify)
+    if run_all or args.table == "7":
+        tables.table7_cyclic(n_cyclic, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
 

@@ -120,6 +120,7 @@ def execute_jax(
 ) -> dict[tuple, float]:
     if prep is None:
         prep = prepare(query, db)
+    query = prep.query  # fold may re-point the aggregate's measure relation
     if query.agg.kind not in ("count", "sum"):
         raise NotImplementedError("jax engine: COUNT/SUM (others on tensor engine)")
 

@@ -6,6 +6,10 @@ paper's "the decision of whether to use the operator is made by the query
 optimizer in a cost-based manner" — here the decision *inside* the
 operator), and returns the aggregated groups directly — intermediate join
 results are never materialized.
+
+Cyclic join hypergraphs (out of the paper's scope) dispatch to the GHD
+compiler (``repro.ghd``, DESIGN.md §3), which materializes hypertree bags
+once and runs the same engines over the acyclic bag tree.
 """
 from __future__ import annotations
 
@@ -18,11 +22,8 @@ from repro.relational.relation import Database
 DEFAULT_MEMORY_BUDGET = 512 << 20  # bytes of message memory before streaming
 
 
-def estimate_plan(
-    query: JoinAggQuery, db: Database, root: str | None = None
-) -> tuple[Prepared, int]:
-    """Prepare + estimate peak message bytes for the tensor engine."""
-    prep = prepare(query, db, root=root)
+def peak_message_bytes(prep: Prepared) -> int:
+    """Estimated peak message bytes of the tensor-engine contraction."""
     deco = prep.decomposition
 
     def subtree_gattrs(rel: str) -> list[str]:
@@ -48,7 +49,27 @@ def estimate_plan(
         for a in list(up) + subtree_gattrs(rel):
             size *= prep.dicts[a].size
         peak = max(peak, size)
-    return prep, peak
+    return peak
+
+
+def estimate_plan(
+    query: JoinAggQuery, db: Database, root: str | None = None
+) -> tuple[Prepared, int]:
+    """Prepare + estimate peak bytes for the tensor engine.
+
+    Cyclic queries route through the GHD compiler; their estimate is the
+    max of the derived plan's message peak and the bag-materialization
+    working-set peak, so acyclic and GHD plans are cost-compared in the
+    same currency."""
+    from repro.ghd.rewrite import compile_ghd, is_cyclic_query
+
+    if is_cyclic_query(query, db):
+        plan = compile_ghd(query, db, root=root)
+        return plan.prepared, max(
+            plan.bag_peak_bytes, peak_message_bytes(plan.prepared)
+        )
+    prep = prepare(query, db, root=root)
+    return prep, peak_message_bytes(prep)
 
 
 def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
@@ -56,6 +77,11 @@ def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
 
     Mirrors the paper's freedom to 'start from any group relation'
     (Section III-A) made cost-based."""
+    from repro.ghd.rewrite import is_cyclic_query
+
+    if is_cyclic_query(query, db):
+        # the GHD compiler optimizes the bag-tree root internally
+        return estimate_plan(query, db)
     best: tuple[Prepared, int] | None = None
     group_rels = {r for r, _ in query.group_by}
     for root in query.relations:
@@ -72,6 +98,27 @@ def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
     return best
 
 
+def run_tensor(
+    query: JoinAggQuery,
+    prep: Prepared,
+    peak: int,
+    memory_budget: int,
+    stream: tuple[str, int] | None,
+) -> dict[tuple, float]:
+    """Tensor-engine execution with the streaming fallback (shared by the
+    acyclic path and the GHD compiler's derived plans)."""
+    from repro.core.tensor_engine import execute_tensor
+
+    if stream is None and peak > memory_budget:
+        # stream over the largest group-attr domain to bound memory
+        attr = max((a for _, a in query.group_by), key=lambda a: prep.dicts[a].size)
+        dom = prep.dicts[attr].size
+        shrink = int(np.ceil(peak / memory_budget))
+        tile = max(1, dom // shrink)
+        stream = (attr, tile)
+    return execute_tensor(query, None, prep=prep, stream=stream)
+
+
 def join_agg(
     query: JoinAggQuery,
     db: Database,
@@ -79,12 +126,24 @@ def join_agg(
     memory_budget: int = DEFAULT_MEMORY_BUDGET,
     stream: tuple[str, int] | None = None,
 ) -> dict[tuple, float]:
-    """Execute a group-by aggregate over a multi-way acyclic join.
+    """Execute a group-by aggregate over a multi-way join.
 
     engine: "tensor" (TPU-native contraction, numpy backend),
             "ref" (paper-faithful data-graph DFS), or
             "jax" (jnp/einsum lowering of the tensor plan).
+
+    Acyclic joins run the paper's pipeline directly.  Cyclic joins —
+    previously a hard error — are compiled through a generalized
+    hypertree decomposition (``repro.ghd``) into an equivalent acyclic
+    query over materialized bag relations, then run on the same engines.
     """
+    from repro.ghd.rewrite import ghd_join_agg, is_cyclic_query
+
+    if is_cyclic_query(query, db):
+        return ghd_join_agg(
+            query, db, engine=engine, memory_budget=memory_budget, stream=stream
+        )
+
     if engine == "ref":
         from repro.core.ref_engine import execute_ref
 
@@ -97,13 +156,4 @@ def join_agg(
 
         return execute_jax(query, db, prep=prep)
 
-    from repro.core.tensor_engine import execute_tensor
-
-    if stream is None and peak > memory_budget:
-        # stream over the largest group-attr domain to bound memory
-        attr = max((a for _, a in query.group_by), key=lambda a: prep.dicts[a].size)
-        dom = prep.dicts[attr].size
-        shrink = int(np.ceil(peak / memory_budget))
-        tile = max(1, dom // shrink)
-        stream = (attr, tile)
-    return execute_tensor(query, db, prep=prep, stream=stream)
+    return run_tensor(query, prep, peak, memory_budget, stream)

@@ -25,6 +25,7 @@ from repro.relational.encoding import (
     EncodedRelation,
     build_dictionaries,
     encode_relation,
+    reduce_grouped,
 )
 from repro.relational.relation import Database
 
@@ -60,7 +61,9 @@ def _fold_leaf_multipliers(
     encoded: dict[str, EncodedRelation],
     dicts: dict[str, Dictionary],
     keep: set[str],
-) -> tuple[dict[str, EncodedRelation], list[str], dict[str, tuple[str, ...]]]:
+) -> tuple[
+    dict[str, EncodedRelation], list[str], dict[str, tuple[str, ...]], dict[str, str]
+]:
     """Fold non-group leaf relations into a neighbor as count weights.
 
     A relation with no group attribute whose attrs are all contained in some
@@ -69,14 +72,23 @@ def _fold_leaf_multipliers(
     tuples — a semi-join).  Folding it pre-execution is the data-reduction
     analogue of the paper's pre-aggregation, and guarantees every tree leaf
     holds a group attribute (the paper's standing assumption).
+
+    The *measure* relation (``keep``) may fold too: its sum/min/max
+    payloads transfer to the host (sum scales by host multiplicity,
+    min/max pass through per key), and the returned ``moved`` map records
+    the relation now carrying the measure so the aggregate spec can be
+    re-pointed.
     """
     relevant = {r: tuple(a) for r, a in schema.relevant.items()}
     folded: list[str] = []
+    moved: dict[str, str] = {}
     changed = True
     while changed:
         changed = False
         for f in list(encoded):
-            if f in keep or f in schema.group_of:
+            if f in schema.group_of:
+                continue
+            if f in keep and not encoded[f].payloads:
                 continue
             hosts = [
                 p for p in encoded
@@ -97,13 +109,41 @@ def _fold_leaf_multipliers(
             csum = np.concatenate([[0], np.cumsum(fc)])
             factor = csum[hi] - csum[lo]
             mask = factor > 0
+            if f in keep:
+                # measure relation folds in: transfer its payloads
+                pay: dict[str, np.ndarray] = {}
+                if "sum" in ef.payloads:
+                    s = np.concatenate([[0.0], np.cumsum(ef.payloads["sum"][order])])
+                    pay["sum"] = ep.count[mask] * (s[hi] - s[lo])[mask]
+                starts = (
+                    np.flatnonzero(np.concatenate([[True], fk[1:] != fk[:-1]]))
+                    if len(fk) else np.zeros(0, np.int64)
+                )
+                gi = np.clip(
+                    np.searchsorted(fk[starts], pkey), 0, max(len(starts) - 1, 0)
+                )
+                for k, red in (("min", np.minimum), ("max", np.maximum)):
+                    if k not in ef.payloads:
+                        continue
+                    if len(starts):
+                        per_key = red.reduceat(ef.payloads[k][order], starts)
+                        pay[k] = per_key[gi][mask]
+                    else:  # empty measure relation: host is empty too
+                        pay[k] = np.zeros(int(mask.sum()))
+                moved[f] = p
+                keep.discard(f)
+                keep.add(p)
+            else:
+                pay = {
+                    k: v[mask] * (factor[mask] if k == "sum" else 1)
+                    for k, v in ep.payloads.items()
+                }
             encoded[p] = EncodedRelation(
                 ep.name,
                 ep.attrs,
                 ep.codes[mask],
                 ep.count[mask] * factor[mask],
-                {k: v[mask] * (factor[mask] if k == "sum" else 1)
-                 for k, v in ep.payloads.items()},
+                pay,
             )
             del encoded[f]
             folded.append(f)
@@ -123,31 +163,21 @@ def _fold_leaf_multipliers(
                     cols = [er.attrs.index(a) for a in new_attrs]
                     sub = er.codes[:, cols]
                     uniq, inv = np.unique(sub, axis=0, return_inverse=True)
-                    inv = inv.ravel()
-                    cnt = np.bincount(inv, weights=er.count, minlength=len(uniq))
-                    pay: dict[str, np.ndarray] = {}
-                    for k, v in er.payloads.items():
-                        if k == "sum":
-                            pay[k] = np.bincount(inv, weights=v, minlength=len(uniq))
-                        elif k == "min":
-                            arr = np.full(len(uniq), np.inf)
-                            np.minimum.at(arr, inv, v)
-                            pay[k] = arr
-                        else:
-                            arr = np.full(len(uniq), -np.inf)
-                            np.maximum.at(arr, inv, v)
-                            pay[k] = arr
+                    cnt, pay = reduce_grouped(
+                        inv.ravel(), len(uniq), er.count, er.payloads
+                    )
                     encoded[r] = EncodedRelation(
-                        er.name, new_attrs, uniq.astype(np.int64),
-                        cnt.astype(np.int64), pay,
+                        er.name, new_attrs, uniq.astype(np.int64), cnt, pay,
                     )
                     relevant[r] = new_attrs
             break
-    return encoded, folded, relevant
+    return encoded, folded, relevant, moved
 
 
-def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepared:
-    schema = resolve_schema(query, db)
+def encode_query(
+    query: JoinAggQuery, db: Database, schema: QuerySchema
+) -> tuple[dict[str, Dictionary], dict[str, EncodedRelation]]:
+    """Front half of :func:`prepare`: shared dictionaries + encoded relations."""
     all_attrs = {a for attrs in schema.relevant.values() for a in attrs}
     rels = [db[r] for r in query.relations]
     dicts = build_dictionaries(rels, all_attrs)
@@ -157,14 +187,44 @@ def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepa
     for rname in query.relations:
         m = measure[1] if (measure and measure[0] == rname) else None
         encoded[rname] = encode_relation(db[rname], schema.relevant[rname], dicts, m)
+    return dicts, encoded
 
+
+def finish_prepare(
+    query: JoinAggQuery,
+    schema: QuerySchema,
+    dicts: dict[str, Dictionary],
+    encoded: dict[str, EncodedRelation],
+    root: str | None = None,
+) -> Prepared:
+    """Back half of :func:`prepare`: fold rewrite + decomposition.
+
+    Also the entry point for pre-encoded relation sets whose multiplicities
+    did not come from raw tuple counts — the GHD compiler feeds materialized
+    bag relations (weights = within-bag join products) through here so cyclic
+    queries reuse the exact same fold/decompose/engine pipeline.
+    """
+    measure = query.agg.measure
     keep = {measure[0]} if measure else set()
-    encoded, folded, relevant = _fold_leaf_multipliers(schema, encoded, dicts, keep)
+    encoded = dict(encoded)
+    encoded, folded, relevant, moved = _fold_leaf_multipliers(
+        schema, encoded, dicts, keep
+    )
+
+    if measure and measure[0] in moved:
+        # the measure relation folded away; re-point the aggregate at the
+        # relation now carrying its payloads
+        cur = measure[0]
+        while cur in moved:
+            cur = moved[cur]
+        query = JoinAggQuery(
+            query.relations, query.group_by, type(query.agg)(cur, measure[1])
+        )
 
     if folded:
         # re-resolve the schema over the surviving relations
         schema = QuerySchema(
-            query=schema.query,
+            query=query,
             join_attrs=frozenset(
                 a for a in schema.join_attrs
                 if sum(a in relevant[r] for r in encoded) >= 2
@@ -177,3 +237,9 @@ def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepa
     hg = Hypergraph({r: frozenset(relevant[r]) for r in encoded})
     deco = decompose(schema, hg, root=root)
     return Prepared(query, schema, dicts, encoded, deco, folded)
+
+
+def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepared:
+    schema = resolve_schema(query, db)
+    dicts, encoded = encode_query(query, db, schema)
+    return finish_prepare(query, schema, dicts, encoded, root=root)

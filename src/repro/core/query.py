@@ -42,7 +42,16 @@ class QuerySchema:
     group_of: dict[str, str]  # group relation -> its group attribute
 
 
-def resolve_schema(query: JoinAggQuery, db: Database) -> QuerySchema:
+def resolve_schema(
+    query: JoinAggQuery, db: Database, allow_group_join_attrs: bool = False
+) -> QuerySchema:
+    """Validate the query against ``db``.
+
+    ``allow_group_join_attrs=True`` permits group attrs that participate
+    in joins — used by the GHD compiler, which realizes the paper's
+    column-copy convention itself (Section II-A); the acyclic pipeline
+    requires the caller to have done the copy and keeps the check.
+    """
     attr_count: dict[str, int] = {}
     for rname in query.relations:
         for a in db[rname].attrs:
@@ -53,7 +62,7 @@ def resolve_schema(query: JoinAggQuery, db: Database) -> QuerySchema:
     for rel, attr in query.group_by:
         if attr not in db[rel].attrs:
             raise ValueError(f"group attr {rel}.{attr} does not exist")
-        if attr in join_attrs:
+        if attr in join_attrs and not allow_group_join_attrs:
             raise ValueError(
                 f"group attr {rel}.{attr} participates in a join; "
                 "copy the column under a fresh name first (Section II-A)"
@@ -68,8 +77,9 @@ def resolve_schema(query: JoinAggQuery, db: Database) -> QuerySchema:
     relevant: dict[str, tuple[str, ...]] = {}
     for rname in query.relations:
         attrs = [a for a in db[rname].attrs if a in join_attrs]
-        if rname in group_of:
-            attrs.append(group_of[rname])
+        g = group_of.get(rname)
+        if g and g not in attrs:
+            attrs.append(g)
         if not attrs:
             raise ValueError(f"relation {rname!r} contributes no join/group attrs")
         relevant[rname] = tuple(attrs)

@@ -134,6 +134,7 @@ def execute_ref(
         raise NotImplementedError("ref engine implements COUNT (paper's experiments)")
     if prep is None:
         prep = prepare(query, db)
+    query = prep.query
     g = build_data_graph(prep)
     deco = prep.decomposition
     canonical = [r for r, _ in prep.group_attrs]

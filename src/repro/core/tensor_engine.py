@@ -199,6 +199,7 @@ def execute_tensor(
     """Execute on the numpy backend; returns {group values: aggregate}."""
     if prep is None:
         prep = prepare(query, db)
+    query = prep.query  # fold may re-point the aggregate's measure relation
     kind = query.agg.kind
 
     def run_once(encoded, domains, offsets) -> dict[tuple, float]:

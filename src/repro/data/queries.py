@@ -113,3 +113,84 @@ def imdb_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
 
 
 REAL = {"TPCH": tpch_like, "DBLP": dblp_like, "ORDS": ords_like, "IMDB": imdb_like}
+
+
+# --- cyclic graph-pattern workloads (GHD compiler, DESIGN.md §3) ---------
+#
+# These join hypergraphs are cyclic, so the paper's acyclic JOIN-AGG
+# cannot run them directly; ``join_agg`` compiles them through a
+# generalized hypertree decomposition (``repro.ghd``).
+
+
+def triangle_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    """Triangle counting per vertex label on a scale-free directed graph:
+
+        SELECT l.vlabel, COUNT(*)
+        FROM E e1, E e2, E e3, L l
+        WHERE e1.b = e2.b' ... (a→b→c→a) AND l.a = e1.a
+        GROUP BY l.vlabel;
+    """
+    rng = np.random.default_rng(seed)
+    n_nodes = max(8, n // 8)
+    n_labels = max(2, min(16, n_nodes // 4))
+    src = _zipf_ids(rng, n, n_nodes, a=1.1)
+    dst = _zipf_ids(rng, n, n_nodes, a=1.1)
+    labels = rng.integers(0, n_labels, n_nodes)
+    db = Database.from_mapping(
+        {
+            "E1": {"a": src, "b": dst},
+            "E2": {"b": src, "c": dst},
+            "E3": {"c": src, "a": dst},
+            "L": {"a": np.arange(n_nodes), "vlabel": labels},
+        }
+    )
+    q = JoinAggQuery(("E1", "E2", "E3", "L"), (("L", "vlabel"),))
+    return db, q
+
+
+def four_cycle_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    """4-cycle counting per anchor-vertex label (a→b→c→d→a)."""
+    rng = np.random.default_rng(seed)
+    n_nodes = max(8, n // 10)
+    n_labels = max(2, min(16, n_nodes // 4))
+    src = _zipf_ids(rng, n, n_nodes, a=1.1)
+    dst = _zipf_ids(rng, n, n_nodes, a=1.1)
+    labels = rng.integers(0, n_labels, n_nodes)
+    db = Database.from_mapping(
+        {
+            "E1": {"a": src, "b": dst},
+            "E2": {"b": src, "c": dst},
+            "E3": {"c": src, "d": dst},
+            "E4": {"d": src, "a": dst},
+            "L": {"a": np.arange(n_nodes), "lab": labels},
+        }
+    )
+    q = JoinAggQuery(("E1", "E2", "E3", "E4", "L"), (("L", "lab"),))
+    return db, q
+
+
+def fof_common_group_like(n: int, seed: int = 0) -> tuple[Database, JoinAggQuery]:
+    """Friends-of-friends u–v–w where u and w belong to a common group,
+    counted per group.  The group id both joins G1 ⋈ G2 *and* is the
+    group-by attribute — the case the GHD compiler handles with the
+    paper's column-copy convention."""
+    rng = np.random.default_rng(seed)
+    n_people = max(8, n // 10)
+    n_groups = max(2, n_people // 6)
+    db = Database.from_mapping(
+        {
+            "F1": {"u": _zipf_ids(rng, n, n_people), "v": _zipf_ids(rng, n, n_people)},
+            "F2": {"v": _zipf_ids(rng, n, n_people), "w": _zipf_ids(rng, n, n_people)},
+            "G1": {"u": _zipf_ids(rng, n, n_people), "grp": rng.integers(0, n_groups, n)},
+            "G2": {"w": _zipf_ids(rng, n, n_people), "grp": rng.integers(0, n_groups, n)},
+        }
+    )
+    q = JoinAggQuery(("F1", "F2", "G1", "G2"), (("G1", "grp"),))
+    return db, q
+
+
+CYCLIC = {
+    "TRIANGLE": triangle_like,
+    "FOURCYCLE": four_cycle_like,
+    "FOFGROUP": fof_common_group_like,
+}

@@ -1,0 +1,31 @@
+"""GHD compiler: cyclic join-aggregate queries over the acyclic pipeline.
+
+The paper's JOIN-AGG operator requires an α-acyclic join; this package
+lifts it to arbitrary (cyclic) queries the AJAR way [Joglekar, Puttagunta
+& Ré]: cover the query hypergraph with a *generalized hypertree
+decomposition* (a tree of attribute bags, each bag covered by relations),
+materialize every bag once as a pre-aggregated multiplicity relation, and
+run the existing acyclic message-passing over the bag tree.
+
+* :mod:`repro.ghd.hypertree` — GHD construction by elimination-order
+  search, scored by estimated bag size (min-width tree wins).
+* :mod:`repro.ghd.bags` — blocked-COO bag materialization in the counting
+  semiring, with peak-bytes accounting.
+* :mod:`repro.ghd.rewrite` — emits the derived acyclic query + database
+  of bag relations and routes it through the unchanged engine pipeline.
+
+``core.operator.join_agg`` dispatches here transparently when the GYO
+test reports a cyclic hypergraph (see DESIGN.md §3).
+"""
+from repro.ghd.hypertree import GHD, Bag, build_ghd
+from repro.ghd.rewrite import GHDPlan, compile_ghd, ghd_join_agg, is_cyclic_query
+
+__all__ = [
+    "GHD",
+    "Bag",
+    "build_ghd",
+    "GHDPlan",
+    "compile_ghd",
+    "ghd_join_agg",
+    "is_cyclic_query",
+]

@@ -1,0 +1,232 @@
+"""Cyclic → acyclic query rewrite over a GHD (the compiler's back end).
+
+``compile_ghd`` turns a cyclic :class:`JoinAggQuery` into
+
+* a derived acyclic ``JoinAggQuery`` whose relations are the GHD's bags,
+* a derived ``Database`` of decoded bag tuples (``__count`` multiplicity
+  column included, for inspection and oracle cross-checks), and
+* a ready :class:`Prepared` whose encoded relations carry the bag
+  multiplicities — fed through the *unchanged* fold/decompose/engine
+  pipeline via :func:`repro.core.prepare.finish_prepare`.
+
+Group attributes that land inside bags follow the paper's column-copy
+convention (Section II-A): a group attribute shared between bags (a
+derived join attribute) is copied under a fresh name inside its group
+relation's bag, and the derived query groups by the copy.  This also
+lifts the acyclic pipeline's "group attrs must not join" restriction for
+cyclic inputs — e.g. counting 4-cycles *per vertex* works out of the box.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph
+from repro.core.prepare import Prepared, encode_query, finish_prepare
+from repro.core.query import JoinAggQuery, QuerySchema, resolve_schema
+from repro.ghd.bags import MAX_DENSE_ELEMS, BagTable, materialize_bag
+from repro.ghd.hypertree import GHD, build_ghd
+from repro.relational.encoding import Dictionary, EncodedRelation
+from repro.relational.relation import Database, Relation
+
+COPY_SUFFIX = "__grp"  # column-copy naming for group attrs shared across bags
+
+
+def is_cyclic_query(query: JoinAggQuery, db: Database) -> bool:
+    """GYO test on the query's own hypergraph (group-join attrs allowed)."""
+    schema = resolve_schema(query, db, allow_group_join_attrs=True)
+    hg = Hypergraph({r: frozenset(a) for r, a in schema.relevant.items()})
+    return not hg.is_acyclic()
+
+
+@dataclass
+class GHDPlan:
+    """Everything the GHD compiler produced for one cyclic query."""
+
+    query: JoinAggQuery  # the original (cyclic) query
+    ghd: GHD
+    bag_tables: dict[str, BagTable]
+    derived_query: JoinAggQuery  # acyclic, over bag relations
+    derived_db: Database  # decoded bag tuples (+ __count column)
+    prepared: Prepared  # ready for all three engines
+    copied_attrs: dict[str, str]  # original group attr -> copy column
+    bag_peak_bytes: int  # high-water working set of bag materialization
+
+    @property
+    def est_width_elems(self) -> int:
+        return self.ghd.max_est_elems
+
+
+def _append_copy_column(bt: BagTable, src: str, copy: str) -> BagTable:
+    i = bt.attrs.index(src)
+    codes = np.concatenate([bt.codes, bt.codes[:, i : i + 1]], axis=1)
+    return BagTable(
+        bt.name, bt.attrs + (copy,), codes, bt.count, bt.payloads, bt.peak_bytes
+    )
+
+
+def compile_ghd(
+    query: JoinAggQuery,
+    db: Database,
+    root: str | None = None,
+    cap_rows: int = MAX_DENSE_ELEMS,
+) -> GHDPlan:
+    """Compile a (cyclic) query down to the acyclic JOIN-AGG pipeline."""
+    if not query.group_by:
+        raise ValueError("query needs at least one group-by attribute")
+    schema = resolve_schema(query, db, allow_group_join_attrs=True)
+    dicts, encoded = encode_query(query, db, schema)
+
+    edges = {r: frozenset(schema.relevant[r]) for r in query.relations}
+    domains = {a: dicts[a].size for attrs in edges.values() for a in attrs}
+    rows = {r: encoded[r].num_rows for r in query.relations}
+    ghd = build_ghd(edges, domains, rows, group_of=schema.group_of)
+
+    bag_attr_count: dict[str, int] = {}
+    for b in ghd.order:
+        for a in ghd.bags[b].attrs:
+            bag_attr_count[a] = bag_attr_count.get(a, 0) + 1
+    derived_join_attrs = frozenset(a for a, c in bag_attr_count.items() if c >= 2)
+
+    # --- group-by mapping (column copy where a group attr joins bags) ---
+    derived_group_by: list[tuple[str, str]] = []
+    copied: dict[str, str] = {}
+    copy_src: dict[str, str] = {}  # copy column -> source attr
+    group_attr_of_bag: dict[str, str] = {}
+    for rel, g in query.group_by:
+        b = ghd.cover_of[rel]
+        if b in group_attr_of_bag:
+            raise AssertionError(f"bag {b!r} hosts two group attrs")
+        if bag_attr_count[g] >= 2:
+            copy = g + COPY_SUFFIX
+            while copy in copy_src:  # same attr grouped from several relations
+                copy += "_"
+            copied[g] = copy
+            copy_src[copy] = g
+            derived_group_by.append((b, copy))
+            group_attr_of_bag[b] = copy
+        else:
+            derived_group_by.append((b, g))
+            group_attr_of_bag[b] = g
+
+    # --- materialize each bag, projected to its derived-relevant attrs ---
+    bag_tables: dict[str, BagTable] = {}
+    relevant_d: dict[str, tuple[str, ...]] = {}
+    for b in ghd.order:
+        bag = ghd.bags[b]
+        gattr = group_attr_of_bag.get(b)
+        out_attrs = tuple(
+            a for a in bag.attrs
+            if a in derived_join_attrs or a == gattr or copy_src.get(gattr) == a
+        )
+        if not out_attrs:
+            raise ValueError(
+                f"bag {b!r} shares no attrs with the rest of the query "
+                "(cross product: unsupported)"
+            )
+        bt = materialize_bag(bag, encoded, out_attrs, cap_rows=cap_rows)
+        if gattr in copy_src:
+            bt = _append_copy_column(bt, copy_src[gattr], gattr)
+        bag_tables[b] = bt
+        relevant_d[b] = bt.attrs
+
+    # --- derived query / schema / dictionaries ---
+    agg = query.agg
+    if agg.measure is not None:
+        agg = type(agg)(ghd.cover_of[agg.measure[0]], agg.measure[1])
+    derived_query = JoinAggQuery(tuple(ghd.order), tuple(derived_group_by), agg)
+
+    dicts_d: dict[str, Dictionary] = {}
+    for b, bt in bag_tables.items():
+        for a in bt.attrs:
+            if a in dicts_d:
+                continue
+            src = copy_src.get(a, a)
+            dicts_d[a] = dicts[src] if a == src else Dictionary(a, dicts[src].values)
+    schema_d = QuerySchema(
+        query=derived_query,
+        join_attrs=derived_join_attrs,
+        group_attrs=tuple(derived_group_by),
+        relevant=relevant_d,
+        group_of=dict(derived_group_by),
+    )
+    encoded_d: dict[str, EncodedRelation] = {
+        b: bt.to_encoded() for b, bt in bag_tables.items()
+    }
+    derived_db = Database()
+    for b, bt in bag_tables.items():
+        cols = {
+            a: dicts_d[a].decode(bt.codes[:, i]) for i, a in enumerate(bt.attrs)
+        }
+        cols["__count"] = np.asarray(bt.count)
+        derived_db.add(Relation(b, cols))
+
+    # --- route through the unchanged acyclic pipeline (cost-based root) ---
+    from repro.core.operator import peak_message_bytes
+
+    if root is not None:
+        prep = finish_prepare(derived_query, schema_d, dicts_d, encoded_d, root=root)
+    else:
+        best: tuple[Prepared, int] | None = None
+        for cand in {b for b, _ in derived_group_by}:
+            try:
+                p = finish_prepare(
+                    derived_query, schema_d, dicts_d, encoded_d, root=cand
+                )
+            except ValueError:
+                continue
+            peak = peak_message_bytes(p)
+            if best is None or peak < best[1]:
+                best = (p, peak)
+        if best is None:
+            raise ValueError("no valid group-relation root for the bag tree")
+        prep = best[0]
+
+    bag_peak = max((bt.peak_bytes for bt in bag_tables.values()), default=0)
+    return GHDPlan(
+        query=query,
+        ghd=ghd,
+        bag_tables=bag_tables,
+        derived_query=derived_query,
+        derived_db=derived_db,
+        prepared=prep,
+        copied_attrs=copied,
+        bag_peak_bytes=bag_peak,
+    )
+
+
+def ghd_join_agg(
+    query: JoinAggQuery,
+    db: Database,
+    engine: str = "tensor",
+    memory_budget: int | None = None,
+    stream: tuple[str, int] | None = None,
+    plan: GHDPlan | None = None,
+) -> dict[tuple, float]:
+    """Execute a cyclic join-aggregate query through the GHD compiler.
+
+    Pass a precompiled ``plan`` (from :func:`compile_ghd`) to amortize
+    bag materialization across engines/runs — the cyclic analogue of the
+    acyclic engines' ``prep=`` argument."""
+    from repro.core.operator import (
+        DEFAULT_MEMORY_BUDGET,
+        peak_message_bytes,
+        run_tensor,
+    )
+
+    if plan is None:
+        plan = compile_ghd(query, db)
+    prep = plan.prepared
+    if engine == "ref":
+        from repro.core.ref_engine import execute_ref
+
+        return execute_ref(plan.derived_query, plan.derived_db, prep=prep)
+    if engine == "jax":
+        from repro.core.jax_engine import execute_jax
+
+        return execute_jax(plan.derived_query, plan.derived_db, prep=prep)
+    budget = DEFAULT_MEMORY_BUDGET if memory_budget is None else memory_budget
+    return run_tensor(
+        plan.derived_query, prep, peak_message_bytes(prep), budget, stream
+    )

@@ -51,6 +51,36 @@ def build_dictionaries(
     return out
 
 
+def reduce_grouped(
+    inv: np.ndarray,
+    n_out: int,
+    count: np.ndarray,
+    payloads: Mapping[str, np.ndarray],
+) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+    """Re-aggregate pre-aggregated rows into ``n_out`` groups keyed by
+    ``inv``: counts and ``sum`` payloads add, ``min``/``max`` reduce.
+    Shared by the fold rewrite (dead-attr projection) and GHD bag
+    materialization so all payload semantics live in one place."""
+    cnt = np.bincount(inv, weights=count.astype(np.float64), minlength=n_out)
+    out_count = (
+        cnt if np.issubdtype(count.dtype, np.floating)
+        else np.rint(cnt).astype(np.int64)
+    )
+    pay: dict[str, np.ndarray] = {}
+    for k, v in payloads.items():
+        if k == "sum":
+            pay[k] = np.bincount(inv, weights=v, minlength=n_out)
+        elif k == "min":
+            arr = np.full(n_out, np.inf)
+            np.minimum.at(arr, inv, v)
+            pay[k] = arr
+        else:
+            arr = np.full(n_out, -np.inf)
+            np.maximum.at(arr, inv, v)
+            pay[k] = arr
+    return out_count, pay
+
+
 @dataclass
 class EncodedRelation:
     """A relation projected to query-relevant attrs, dictionary-encoded and

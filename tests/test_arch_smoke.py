@@ -11,6 +11,14 @@ from repro.models.model import get_model
 
 B, S = 2, 32
 
+# one dense and one recurrent arch stay in the fast (default) suite; the
+# full registry runs under `pytest -m slow`
+FAST_ARCHS = {"qwen2-1.5b", "rwkv6-3b"}
+ARCH_PARAMS = [
+    a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCHS
+]
+
 
 def _batch(cfg, rng):
     batch = {
@@ -28,7 +36,7 @@ def _batch(cfg, rng):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_loss_finite(arch):
     cfg = get_config(arch, reduced=True)
     model = get_model(cfg)
@@ -41,7 +49,7 @@ def test_train_loss_finite(arch):
     assert 0.0 < float(loss) < 2.5 * np.log(cfg.vocab), (arch, float(loss))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_grads_finite(arch):
     cfg = get_config(arch, reduced=True)
     model = get_model(cfg)
@@ -54,7 +62,7 @@ def test_grads_finite(arch):
         assert np.all(np.isfinite(np.asarray(leaf, np.float32))), arch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_then_decode(arch):
     cfg = get_config(arch, reduced=True)
     model = get_model(cfg)
@@ -107,6 +115,7 @@ def test_decode_matches_prefill_dense():
     )
 
 
+@pytest.mark.slow
 def test_rwkv_decode_matches_prefill():
     cfg = get_config("rwkv6-3b", reduced=True)
     model = get_model(cfg)

@@ -11,7 +11,7 @@ from repro.data import synth
 
 
 def test_selfjoin_graph_memory_linear_in_input():
-    sizes = [2000, 4000, 8000]
+    sizes = [1000, 2000, 4000]
     graph_bytes = []
     for n in sizes:
         db, q = synth.self_join("S1", n)
@@ -25,7 +25,7 @@ def test_selfjoin_graph_memory_linear_in_input():
 
 
 def test_traditional_intermediate_superlinear():
-    sizes = [2000, 4000, 8000]
+    sizes = [500, 1000, 2000]
     inter = []
     for n in sizes:
         db, q = synth.self_join("S1", n)
@@ -42,8 +42,8 @@ def test_traditional_intermediate_superlinear():
 def test_plan_estimator_orders_roots():
     """estimate_plan's peak-message estimate must rank a streaming-needed
     query above a trivial one."""
-    db1, q1 = synth.self_join("S1", 4000)
+    db1, q1 = synth.self_join("S1", 2000)
     _, peak_small = estimate_plan(q1, db1)
-    db2, q2 = synth.branching("B3", 4000)
+    db2, q2 = synth.branching("B3", 2000)
     _, peak_big = estimate_plan(q2, db2)
     assert peak_big > peak_small

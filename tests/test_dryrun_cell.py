@@ -19,6 +19,9 @@ def test_one_cell_lowers_and_compiles(tmp_path):
     assert res.returncode == 0, res.stderr[-2000:]
     rec = json.load(open(tmp_path / "qwen2-1.5b__decode_32k__multi.json"))
     assert rec["status"] == "ok", rec
-    assert rec["dot_flops"] > 1e9
+    # cost analysis reports per-partition flops (observed ~1.3e7 on CPU XLA
+    # for this 512-device cell; x512 ≈ 6.8e9 global); a degenerate cell
+    # would be orders of magnitude below this bound
+    assert rec["dot_flops"] > 5e6
     assert rec["memory"]["temp_size_in_bytes"] < 14e9  # fits v5e HBM
     assert rec["collective_bytes"] > 0

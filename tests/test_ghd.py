@@ -1,0 +1,261 @@
+"""GHD compiler: cyclic join-aggregate queries vs the brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Avg, Max, Min, Sum
+from repro.core.operator import choose_root, estimate_plan, join_agg
+from repro.core.prepare import prepare
+from repro.core.query import JoinAggQuery
+from repro.data.queries import CYCLIC, four_cycle_like, triangle_like
+from repro.ghd.bags import MAX_DENSE_ELEMS
+from repro.ghd.hypertree import build_ghd, verify_ghd
+from repro.ghd.rewrite import compile_ghd, is_cyclic_query
+from repro.relational.oracle import oracle_joinagg
+from repro.relational.relation import Database
+
+from tests.test_joinagg_core import assert_same
+
+RNG = np.random.default_rng(7)
+ENGINES = ("tensor", "ref", "jax")
+
+
+def small_graph(n=250, nodes=20, labels=4, seed=2):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(0, nodes, n),
+        rng.integers(0, nodes, n),
+        rng.integers(0, labels, nodes),
+    )
+
+
+def triangle_db(n=250, nodes=20, labels=4, seed=2):
+    src, dst, lab = small_graph(n, nodes, labels, seed)
+    db = Database.from_mapping(
+        {
+            "E1": {"a": src, "b": dst},
+            "E2": {"b": src, "c": dst},
+            "E3": {"c": src, "a": dst},
+            "L": {"a": np.arange(nodes), "vlabel": lab},
+        }
+    )
+    return db, JoinAggQuery(("E1", "E2", "E3", "L"), (("L", "vlabel"),))
+
+
+def four_cycle_db(n=220, nodes=18, labels=4, seed=3):
+    src, dst, lab = small_graph(n, nodes, labels, seed)
+    db = Database.from_mapping(
+        {
+            "E1": {"a": src, "b": dst},
+            "E2": {"b": src, "c": dst},
+            "E3": {"c": src, "d": dst},
+            "E4": {"d": src, "a": dst},
+            "L": {"a": np.arange(nodes), "lab": lab},
+        }
+    )
+    return db, JoinAggQuery(("E1", "E2", "E3", "E4", "L"), (("L", "lab"),))
+
+
+# --- acceptance: cyclic queries ran nowhere before, now match the oracle ---
+
+
+def test_cyclic_was_a_hard_error():
+    db, q = triangle_db()
+    assert is_cyclic_query(q, db)
+    with pytest.raises(ValueError, match="cyclic"):
+        prepare(q, db)  # the paper-scope pipeline still rejects it
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_triangle_counts_match_oracle(engine):
+    db, q = triangle_db()
+    assert_same(join_agg(q, db, engine=engine), oracle_joinagg(q, db))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_four_cycle_counts_match_oracle(engine):
+    db, q = four_cycle_db()
+    assert_same(join_agg(q, db, engine=engine), oracle_joinagg(q, db))
+
+
+_CATALOG_CACHE: dict = {}
+
+
+def _catalog_case(name):
+    if name not in _CATALOG_CACHE:
+        db, q = CYCLIC[name](n=220, seed=5)
+        _CATALOG_CACHE[name] = (db, q, oracle_joinagg(q, db, lenient=True))
+    return _CATALOG_CACHE[name]
+
+
+@pytest.mark.parametrize("name", list(CYCLIC))
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cyclic_catalog_matches_oracle(name, engine):
+    db, q, want = _catalog_case(name)
+    assert_same(join_agg(q, db, engine=engine), want)
+
+
+# --- column-copy convention: group attr participates in the cyclic join ---
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_four_cycle_per_vertex(engine):
+    db, _ = four_cycle_db()
+    q = JoinAggQuery(("E1", "E2", "E3", "E4"), (("E1", "a"),))
+    want = oracle_joinagg(q, db, lenient=True)
+    assert_same(join_agg(q, db, engine=engine), want)
+
+
+def bowtie_db(n=200, nodes=15, seed=4):
+    """Two triangles sharing vertex ``a`` — any min-width GHD keeps one bag
+    per triangle, so the group attr ``a`` spans both bags and must be
+    column-copied."""
+    rng = np.random.default_rng(seed)
+    cols = lambda x, y: {x: rng.integers(0, nodes, n), y: rng.integers(0, nodes, n)}
+    db = Database.from_mapping(
+        {
+            "E1": cols("a", "b"), "E2": cols("b", "c"), "E3": cols("c", "a"),
+            "E4": cols("a", "d"), "E5": cols("d", "e"), "E6": cols("e", "a"),
+        }
+    )
+    return db, JoinAggQuery(tuple(f"E{i}" for i in range(1, 7)), (("E1", "a"),))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bowtie_per_vertex_column_copy(engine):
+    db, q = bowtie_db()
+    plan = compile_ghd(q, db)
+    assert plan.copied_attrs == {"a": "a__grp"}  # group attr joined two bags
+    want = oracle_joinagg(q, db, lenient=True)
+    assert_same(join_agg(q, db, engine=engine), want)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_triangle_per_vertex_single_bag(engine):
+    db, _ = triangle_db()
+    q = JoinAggQuery(("E1", "E2", "E3"), (("E1", "a"),))
+    want = oracle_joinagg(q, db, lenient=True)
+    assert_same(join_agg(q, db, engine=engine), want)
+
+
+def test_same_attr_grouped_from_two_relations_gets_distinct_copies():
+    """Grouping the shared ``grp`` attr from both G1 and G2 must yield two
+    distinct copy columns (identical names would silently join the copies)."""
+    rng = np.random.default_rng(9)
+    n, people, groups = 150, 12, 5
+    db = Database.from_mapping(
+        {
+            "F1": {"u": rng.integers(0, people, n), "v": rng.integers(0, people, n)},
+            "F2": {"v": rng.integers(0, people, n), "w": rng.integers(0, people, n)},
+            "G1": {"u": rng.integers(0, people, n), "grp": rng.integers(0, groups, n)},
+            "G2": {"w": rng.integers(0, people, n), "grp": rng.integers(0, groups, n)},
+        }
+    )
+    q = JoinAggQuery(("F1", "F2", "G1", "G2"), (("G1", "grp"), ("G2", "grp")))
+    plan = compile_ghd(q, db)
+    names = [a for _, a in plan.derived_query.group_by]
+    assert len(set(names)) == 2
+    want = oracle_joinagg(q, db, lenient=True)
+    for engine in ENGINES:
+        assert_same(join_agg(q, db, engine=engine), want)
+
+
+# --- non-COUNT aggregates ride the same bag machinery ---
+
+
+@pytest.mark.parametrize(
+    "agg,engines",
+    [
+        (Sum("E2", "m"), ("tensor", "jax")),
+        (Avg("E2", "m"), ("tensor",)),
+        (Min("E2", "m"), ("tensor",)),
+        (Max("E2", "m"), ("tensor",)),
+    ],
+)
+def test_cyclic_aggregates(agg, engines):
+    db, _ = triangle_db()
+    db["E2"].columns["m"] = RNG.normal(size=db["E2"].num_rows).round(2)
+    q = JoinAggQuery(("E1", "E2", "E3", "L"), (("L", "vlabel"),), agg)
+    want = oracle_joinagg(q, db)
+    for engine in engines:
+        assert_same(join_agg(q, db, engine=engine), want)
+
+
+# --- planner integration: GHD costs flow through estimate_plan ---
+
+
+def test_estimate_plan_reports_ghd_peaks():
+    db, q = triangle_db()
+    prep, peak = estimate_plan(q, db)
+    assert peak > 0
+    plan = compile_ghd(q, db)
+    assert plan.bag_peak_bytes > 0
+    assert peak >= plan.bag_peak_bytes  # bag accounting folded into the estimate
+    # the derived plan is a normal Prepared: same accounting as acyclic plans
+    prep2, peak2 = choose_root(q, db)
+    assert peak2 <= peak or peak2 == peak
+
+
+def test_streaming_on_cyclic_matches_full():
+    db, q = triangle_db()
+    full = join_agg(q, db)
+    tiny = join_agg(q, db, memory_budget=1024)  # forces group-axis streaming
+    assert_same(tiny, full)
+
+
+def test_bag_cap_raises_memory_error():
+    db, q = triangle_db()
+    with pytest.raises(MemoryError, match="MAX_DENSE_ELEMS"):
+        compile_ghd(q, db, cap_rows=4)
+
+
+def test_max_dense_elems_mirrors_jax_engine():
+    from repro.core.jax_engine import MAX_DENSE_ELEMS as JAX_CAP
+
+    assert MAX_DENSE_ELEMS == JAX_CAP
+
+
+# --- hypertree construction invariants ---
+
+
+def test_triangle_ghd_properties():
+    edges = {
+        "E1": frozenset({"a", "b"}),
+        "E2": frozenset({"b", "c"}),
+        "E3": frozenset({"c", "a"}),
+        "L": frozenset({"a", "l"}),
+    }
+    domains = {"a": 20, "b": 20, "c": 20, "l": 4}
+    rows = {"E1": 100, "E2": 100, "E3": 100, "L": 20}
+    ghd = build_ghd(edges, domains, rows, group_of={"L": "l"})
+    verify_ghd(ghd, edges)
+    core = [b for b in ghd.order if {"a", "b", "c"} <= set(ghd.bags[b].attrs)]
+    assert len(core) == 1  # the triangle collapses into one bag
+    # tightest-cover estimate: |E| * |dom(c)| caps the dense a*b*c product
+    assert ghd.est_elems[core[0]] <= 100 * 20
+
+
+def test_ghd_of_acyclic_query_is_join_tree():
+    # chain R1(g,p0) R2(p0,p1) R3(p1,h): GHD must not inflate bag count
+    edges = {
+        "R1": frozenset({"g", "p0"}),
+        "R2": frozenset({"p0", "p1"}),
+        "R3": frozenset({"p1", "h"}),
+    }
+    ghd = build_ghd(edges, {a: 8 for a in "g p0 p1 h".split()},
+                    {r: 50 for r in edges}, group_of={"R1": "g", "R3": "h"})
+    verify_ghd(ghd, edges)
+    assert len(ghd.order) <= 3
+
+
+def test_acyclic_queries_keep_old_path():
+    rng = np.random.default_rng(0)
+    n, a, b = 150, 5, 7
+    db = Database.from_mapping(
+        {
+            "R1": {"g1": rng.integers(0, a, n), "p": rng.integers(0, b, n)},
+            "R2": {"p": rng.integers(0, b, n), "g2": rng.integers(0, a, n)},
+        }
+    )
+    q = JoinAggQuery(("R1", "R2"), (("R1", "g1"), ("R2", "g2")))
+    assert not is_cyclic_query(q, db)
+    assert_same(join_agg(q, db), oracle_joinagg(q, db))

@@ -28,7 +28,7 @@ def selfjoin_db(n=200, a=6, b=8):
     ), JoinAggQuery(("R1", "R2"), (("R1", "g1"), ("R2", "g2")))
 
 
-def chain_db(n=150, a=5, b=7):
+def chain_db(n=120, a=5, b=6):
     """Paper Section V 'Chain Join': R1(g1,p0) ⋈ R2(p0,p1) ⋈ R3(p1,p2) ⋈ R4(p2,g2)."""
     db = Database.from_mapping(
         {

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on JOIN-AGG system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
 from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # many randomized examples; run via `-m slow`
 
 from repro.core.operator import join_agg
 from repro.core.query import JoinAggQuery
