@@ -1,9 +1,18 @@
-"""Shared benchmark helpers: wall-time and peak-memory measurement."""
+"""Shared benchmark helpers: wall-time and peak-memory measurement.
+
+Every :func:`emit` line is also collected into :data:`RECORDS` so the
+harness can write a machine-readable ``BENCH_*.json`` next to the CSV
+stream (:func:`write_json`) — CI uploads it as a per-PR artifact.
+"""
 from __future__ import annotations
 
+import json
+import platform
 import time
 import tracemalloc
 from typing import Callable
+
+RECORDS: list[dict] = []
 
 
 def timed(fn: Callable, *args, **kwargs):
@@ -26,7 +35,26 @@ def peak_memory(fn: Callable, *args, **kwargs):
 def emit(name: str, seconds: float, derived: str) -> str:
     line = f"{name},{seconds * 1e6:.1f},{derived}"
     print(line, flush=True)
+    RECORDS.append(
+        {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+    )
     return line
+
+
+def write_json(path: str, **meta) -> None:
+    """Dump everything emitted so far as one machine-readable document."""
+    payload = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "python": platform.python_version(),
+            **meta,
+        },
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
 
 
 def check_agree(a: dict, b: dict, what: str) -> None:

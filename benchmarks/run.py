@@ -1,29 +1,40 @@
 """Benchmark harness: one function per paper table.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--scale paper`` uses the
-paper's 500k rows/relation (slow on 1 CPU); the default is
+Prints ``name,us_per_call,derived`` CSV and always writes the same
+records as machine-readable ``BENCH_<scale>.json`` (override the path
+with ``--json-out``) so CI can archive a perf datapoint per PR.
+``--scale paper`` uses the paper's 500k rows/relation (slow on 1 CPU);
+``tiny`` is the CI smoke config; the default ``small`` is
 container-friendly and preserves every selectivity ratio.
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks import tables
+from benchmarks import common, tables
+
+TABLES = ["1", "2", "3", "4", "5", "6", "7", "8"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", choices=["small", "medium", "paper"], default="small")
-    ap.add_argument("--table", choices=["1", "2", "3", "4", "5", "6", "7"], default=None)
+    ap.add_argument(
+        "--scale", choices=["tiny", "small", "medium", "paper"], default="small"
+    )
+    ap.add_argument("--table", choices=TABLES, default=None)
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument(
+        "--json-out", default=None,
+        help="path for the JSON record dump (default BENCH_<scale>.json)",
+    )
     args = ap.parse_args()
 
-    n_self = {"small": 20000, "medium": 100000, "paper": 500000}[args.scale]
-    n_chain = {"small": 8000, "medium": 40000, "paper": 500000}[args.scale]
-    n_branch = {"small": 6000, "medium": 30000, "paper": 500000}[args.scale]
-    n_real = {"small": 20000, "medium": 100000, "paper": 500000}[args.scale]
-    n_cyclic = {"small": 4000, "medium": 30000, "paper": 200000}[args.scale]
-    verify = not args.no_verify and args.scale == "small"
+    n_self = {"tiny": 2000, "small": 20000, "medium": 100000, "paper": 500000}[args.scale]
+    n_chain = {"tiny": 1500, "small": 8000, "medium": 40000, "paper": 500000}[args.scale]
+    n_branch = {"tiny": 1500, "small": 6000, "medium": 30000, "paper": 500000}[args.scale]
+    n_real = {"tiny": 2000, "small": 20000, "medium": 100000, "paper": 500000}[args.scale]
+    n_cyclic = {"tiny": 1000, "small": 4000, "medium": 30000, "paper": 200000}[args.scale]
+    verify = not args.no_verify and args.scale in ("tiny", "small")
 
     print("name,us_per_call,derived")
     run_all = args.table is None
@@ -39,8 +50,15 @@ def main() -> None:
         tables.table6_real(n_real, verify)
     if run_all or args.table == "7":
         tables.table7_cyclic(n_cyclic, verify)
+    if run_all or args.table == "8":
+        tables.table8_incremental(n_real, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
+
+    out = args.json_out or f"BENCH_{args.scale}.json"
+    common.write_json(
+        out, scale=args.scale, table=args.table or "all", verify=verify
+    )
 
 
 if __name__ == "__main__":

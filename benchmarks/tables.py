@@ -10,6 +10,10 @@ Table VII — cyclic graph patterns (triangle / 4-cycle / FOF-group):
             GHD+tensor vs GHD+jax vs the binary-join baseline, which
             materializes the full (quadratic+) intermediate the bag
             decomposition avoids.
+Table VIII — incremental maintenance (DESIGN.md §4): refresh latency of
+            a MaintainedJoinAgg delta vs full join_agg recompute vs the
+            binary-join baseline, across delta sizes 1→10⁴ on the B2
+            star query, with peak-delta-bytes accounting.
 
 The 'PostgreSQL' column of the paper maps to the in-process traditional
 binary-join baseline; all engines are validated to agree on each run.
@@ -110,6 +114,53 @@ def table6_real(n: int, verify: bool) -> None:
     for name, gen in REAL.items():
         db, q = gen(n)
         _compare(f"table6,{name}", db, q, verify=verify)
+
+
+def table8_incremental(n: int, verify: bool) -> None:
+    """Refresh latency vs full recompute vs binary join across delta sizes.
+
+    The maintained handle sees each insert batch; the database is mutated
+    in lock-step so the full-recompute and baseline timings answer the
+    *same* query.  With verification on, the refreshed result must be
+    bit-identical to the from-scratch one."""
+    import numpy as np
+
+    from repro.incremental import MaintainedJoinAgg
+
+    db, q = synth.make("B2", n)
+    handle, t_prep = timed(MaintainedJoinAgg, q, db)
+    emit("table8,B2,prepare", t_prep, f"rows={n}")
+    rng = np.random.default_rng(11)
+    sel1, sel2 = synth.BRANCH["B2"]
+    jdom, bdom = max(2, int(sel1 * n)), max(2, int(sel2 * n))
+    for dsize in (1, 10, 100, 1000, 10000):
+        if dsize > n:
+            break
+        delta = {
+            "j": rng.integers(0, jdom, dsize),
+            "b": rng.integers(0, bdom, dsize),
+        }
+        _, t_refresh = timed(handle.insert, "R2", delta)
+        r2 = db.relations["R2"].columns
+        r2["j"] = np.concatenate([r2["j"], delta["j"]])
+        r2["b"] = np.concatenate([r2["b"], delta["b"]])
+        full, t_full = timed(join_agg, q, db)
+        if verify:
+            assert handle.result() == full, f"d{dsize}: refresh not identical"
+        emit(
+            f"table8,B2,refresh_d{dsize}", t_refresh,
+            f"speedup_vs_full={t_full / t_refresh:.1f}x;"
+            f"peak_delta_mb={handle.stats.peak_delta_bytes / 1e6:.3f};"
+            f"rows_rescanned={handle.stats.rows_rescanned}",
+        )
+        emit(f"table8,B2,full_recompute_d{dsize}", t_full, f"groups={len(full)}")
+    (res_b, stats), t_bin = timed(binary_join_agg, q, db)
+    emit(
+        "table8,B2,binary", t_bin,
+        f"groups={len(res_b)};max_interm_rows={stats.max_intermediate_rows}",
+    )
+    if verify:
+        check_agree(handle.result(), res_b, "table8:binary")
 
 
 def table7_cyclic(n: int, verify: bool) -> None:

@@ -1,0 +1,81 @@
+"""Incremental maintenance: sub-recompute refresh under a tuple stream.
+
+Prepares the benchmark star query (B2 shape) once with
+``operator.maintain()``, then streams insert/delete batches through the
+maintained handle and compares each refresh against a full ``join_agg``
+recompute — results must be bit-identical while the refresh runs an
+order of magnitude faster (DESIGN.md §4).  Finishes with a cyclic
+triangle query to show GHD bag invalidation: only the bags a delta
+touches re-materialize.
+
+    PYTHONPATH=src python examples/incremental_maintenance.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.operator import join_agg, maintain
+from repro.core.query import JoinAggQuery
+from repro.data import synth
+from repro.relational.relation import Database
+
+rng = np.random.default_rng(42)
+
+# --- acyclic: the B2 star (R1(g1,j) ⋈ R2(j,b) ⋈ R3(b,g2) ⋈ R4(b,g3)) ---
+n = 20000
+db, q = synth.make("B2", n)
+t0 = time.perf_counter()
+handle = maintain(q, db)
+print(f"prepare + first result: {time.perf_counter() - t0:.3f}s "
+      f"({len(handle.result())} groups)")
+
+jdom = bdom = max(2, int(0.1 * n))
+for dsize in (1, 10, 100):
+    batch = {
+        "j": rng.integers(0, jdom, dsize),
+        "b": rng.integers(0, bdom, dsize),
+    }
+    t0 = time.perf_counter()
+    handle.insert("R2", batch)
+    t_refresh = time.perf_counter() - t0
+
+    # mutate the database the slow way and recompute from scratch
+    r2 = db.relations["R2"].columns
+    r2["j"] = np.concatenate([r2["j"], batch["j"]])
+    r2["b"] = np.concatenate([r2["b"], batch["b"]])
+    t0 = time.perf_counter()
+    full = join_agg(q, db)
+    t_full = time.perf_counter() - t0
+
+    assert handle.result() == full, "refresh must be bit-identical"
+    print(f"Δ={dsize:4d} tuples: refresh {t_refresh * 1e3:7.1f}ms   "
+          f"full recompute {t_full * 1e3:7.1f}ms   "
+          f"speedup {t_full / t_refresh:5.1f}x")
+
+s = handle.stats
+print(f"stats: {s.refreshes} refreshes, {s.delta_rows} delta rows, "
+      f"{s.rows_rescanned} rows rescanned, "
+      f"peak delta working set {s.peak_delta_bytes / 1e6:.2f} MB")
+
+# --- cyclic: triangles per vertex, maintained through the GHD compiler ---
+m, vdom = 3000, 60
+edges = {
+    "E1": {"x": rng.integers(0, vdom, m), "y": rng.integers(0, vdom, m)},
+    "E2": {"y": rng.integers(0, vdom, m), "z": rng.integers(0, vdom, m)},
+    "E3": {"z": rng.integers(0, vdom, m), "x": rng.integers(0, vdom, m),
+           "g": rng.integers(0, vdom, m)},
+}
+tdb = Database.from_mapping({r: dict(c) for r, c in edges.items()})
+tq = JoinAggQuery(("E1", "E2", "E3"), (("E3", "g"),))
+th = maintain(tq, tdb)
+batch = {"x": rng.integers(0, vdom, 20), "y": rng.integers(0, vdom, 20)}
+t0 = time.perf_counter()
+th.insert("E1", batch)
+t_refresh = time.perf_counter() - t0
+e1 = tdb.relations["E1"].columns
+e1["x"] = np.concatenate([e1["x"], batch["x"]])
+e1["y"] = np.concatenate([e1["y"], batch["y"]])
+assert th.result() == join_agg(tq, tdb)
+print(f"cyclic Δ=20 edges: refresh {t_refresh * 1e3:.1f}ms — "
+      f"{th.stats.dirty_bags} dirty bag(s) re-materialized, "
+      f"{th.stats.clean_bags_reused} clean bag(s) reused")

@@ -60,33 +60,46 @@ class DenseProgram:
     prep: Prepared
     fn: Callable[[dict[str, jax.Array]], jax.Array]
     tensor_attrs: dict[str, tuple[str, ...]]
+    # hashable einsum-plan signature; programs with equal keys are the
+    # same computation, so their traces/compilations are shared
+    plan_key: tuple = ()
 
     def input_arrays(self, dtype=np.float32) -> dict[str, jax.Array]:
         return {r: jnp.asarray(dense_tensor(self.prep, r, dtype))
                 for r in self.prep.encoded}
 
 
-def build_dense_program(prep: Prepared) -> DenseProgram:
-    """Construct the einsum message-passing program (COUNT semantics; SUM
-    works by swapping the measure relation's tensor weights)."""
+# Plan-keyed program caches.  Repeated executions of structurally equal
+# queries — most importantly the incremental maintainer's fold/cyclic
+# refreshes, which rebuild a fresh ``Prepared`` per delta batch — reuse
+# one traced+compiled program instead of re-jitting every refresh.
+# Hard-capped: a jit wrapper retains one executable per input-shape
+# combination, so long-lived processes with many distinct query
+# structures (or steadily growing domains) would otherwise accumulate
+# compiled programs without bound; on overflow the whole cache is
+# dropped and the executables become garbage-collectable again.
+_PROGRAM_CACHE_MAX = 32
+_FN_CACHE: dict[tuple, Callable] = {}
+_JIT_CACHE: dict[tuple, Callable] = {}
+
+
+def _dense_plan(prep: Prepared) -> tuple[tuple, str]:
+    """Post-order einsum plan: ((rel, expr, child rels), ...), root."""
     ax = _axis_letters(prep)
     deco = prep.decomposition
     canonical = [attr for _, attr in prep.group_attrs]
+    plan: list[tuple[str, str, tuple[str, ...]]] = []
 
-    def subtree(rel: str, parent: str | None, tensors) -> tuple[str, jax.Array]:
+    def subtree(rel: str, parent: str | None) -> str:
         er = prep.encoded[rel]
-        own = tensors[rel]
-        own_axes = "".join(ax[a] for a in er.attrs)
-        operands = [own]
-        exprs = [own_axes]
+        exprs = ["".join(ax[a] for a in er.attrs)]
         gattrs = [prep.schema.group_of[rel]] if rel in prep.schema.group_of else []
-        for child in deco.nodes[rel].children:
-            cexpr, carr = subtree(child, rel, tensors)
-            operands.append(carr)
+        children = tuple(deco.nodes[rel].children)
+        for child in children:
+            cexpr = subtree(child, rel)
             exprs.append(cexpr)
             gattrs.extend(
-                a for a in canonical
-                if ax[a] in cexpr and a not in gattrs and a in canonical
+                a for a in canonical if ax[a] in cexpr and a not in gattrs
             )
         if parent is None:
             up: list[str] = []
@@ -94,14 +107,38 @@ def build_dense_program(prep: Prepared) -> DenseProgram:
             up = sorted(set(er.attrs) & set(prep.encoded[parent].attrs))
         out_attrs = list(up) + [a for a in canonical if a in gattrs]
         out_axes = "".join(ax[a] for a in out_attrs)
-        expr = ",".join(exprs) + "->" + out_axes
-        return out_axes, jnp.einsum(expr, *operands)
+        plan.append((rel, ",".join(exprs) + "->" + out_axes, children))
+        return out_axes
 
+    subtree(deco.root, None)
+    return tuple(plan), deco.root
+
+
+def _fn_from_plan(plan: tuple, root: str) -> Callable:
     def fn(tensors: dict[str, jax.Array]) -> jax.Array:
-        _, arr = subtree(deco.root, None, tensors)
-        return arr
+        results: dict[str, jax.Array] = {}
+        for rel, expr, children in plan:
+            results[rel] = jnp.einsum(
+                expr, tensors[rel], *[results[c] for c in children]
+            )
+        return results[root]
 
-    return DenseProgram(prep, fn, {r: prep.encoded[r].attrs for r in prep.encoded})
+    return fn
+
+
+def build_dense_program(prep: Prepared) -> DenseProgram:
+    """Construct the einsum message-passing program (COUNT semantics; SUM
+    works by swapping the measure relation's tensor weights)."""
+    plan, root = _dense_plan(prep)
+    key = (plan, root)
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        if len(_FN_CACHE) >= _PROGRAM_CACHE_MAX:
+            _FN_CACHE.clear()
+        fn = _FN_CACHE.setdefault(key, _fn_from_plan(plan, root))
+    return DenseProgram(
+        prep, fn, {r: prep.encoded[r].attrs for r in prep.encoded}, key
+    )
 
 
 def _decode(prep: Prepared, arr: np.ndarray) -> dict[tuple, float]:
@@ -135,7 +172,12 @@ def execute_jax(
             np.add.at(t, tuple(er.codes[:, i] for i in range(len(er.attrs))),
                       er.payloads["sum"].astype(np.float32))
             tensors[rel] = jnp.asarray(t)
-        arr = np.asarray(jax.jit(prog.fn)(tensors))
+        jitted = _JIT_CACHE.get(prog.plan_key)
+        if jitted is None:
+            if len(_JIT_CACHE) >= _PROGRAM_CACHE_MAX:
+                _JIT_CACHE.clear()
+            jitted = _JIT_CACHE.setdefault(prog.plan_key, jax.jit(prog.fn))
+        arr = np.asarray(jitted(tensors))
         return _decode(prep, arr)
 
     if mode == "kernels":

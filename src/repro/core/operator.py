@@ -119,6 +119,23 @@ def run_tensor(
     return execute_tensor(query, None, prep=prep, stream=stream)
 
 
+def maintain(
+    query: JoinAggQuery,
+    db: Database,
+    engine: str = "tensor",
+):
+    """Prepare ``query`` once and return a handle that keeps the result
+    maintained under batched inserts/deletes (``repro.incremental``,
+    DESIGN.md §4): subtree messages are cached per decomposition-tree
+    node and a delta re-propagates only along its dirty root-path, so a
+    small delta refreshes orders of magnitude faster than ``join_agg``.
+    Cyclic queries compose with the GHD compiler — only the bags a delta
+    touches re-materialize."""
+    from repro.incremental.maintained import MaintainedJoinAgg
+
+    return MaintainedJoinAgg(query, db, engine=engine)
+
+
 def join_agg(
     query: JoinAggQuery,
     db: Database,

@@ -38,6 +38,15 @@ class Prepared:
     encoded: dict[str, EncodedRelation]
     decomposition: Decomposition
     folded: list[str]
+    # folded relation -> surviving host relation (fold chains resolved);
+    # incremental maintenance uses this to route a delta on a folded
+    # relation — the fold baked its counts into the host, so the host's
+    # subtree must be rebuilt rather than delta-patched (DESIGN.md §4)
+    fold_hosts: dict[str, str] = None  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        if self.fold_hosts is None:
+            self.fold_hosts = {}
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:
@@ -62,7 +71,11 @@ def _fold_leaf_multipliers(
     dicts: dict[str, Dictionary],
     keep: set[str],
 ) -> tuple[
-    dict[str, EncodedRelation], list[str], dict[str, tuple[str, ...]], dict[str, str]
+    dict[str, EncodedRelation],
+    list[str],
+    dict[str, tuple[str, ...]],
+    dict[str, str],
+    dict[str, str],
 ]:
     """Fold non-group leaf relations into a neighbor as count weights.
 
@@ -81,6 +94,7 @@ def _fold_leaf_multipliers(
     """
     relevant = {r: tuple(a) for r, a in schema.relevant.items()}
     folded: list[str] = []
+    host_of: dict[str, str] = {}  # folded relation -> immediate host
     moved: dict[str, str] = {}
     changed = True
     while changed:
@@ -147,6 +161,7 @@ def _fold_leaf_multipliers(
             )
             del encoded[f]
             folded.append(f)
+            host_of[f] = p
             changed = True
             # drop attrs that stopped being join attrs and re-aggregate
             counts: dict[str, int] = {}
@@ -171,16 +186,16 @@ def _fold_leaf_multipliers(
                     )
                     relevant[r] = new_attrs
             break
-    return encoded, folded, relevant, moved
+    return encoded, folded, relevant, moved, host_of
 
 
 def encode_query(
-    query: JoinAggQuery, db: Database, schema: QuerySchema
+    query: JoinAggQuery, db: Database, schema: QuerySchema, growable: bool = False
 ) -> tuple[dict[str, Dictionary], dict[str, EncodedRelation]]:
     """Front half of :func:`prepare`: shared dictionaries + encoded relations."""
     all_attrs = {a for attrs in schema.relevant.values() for a in attrs}
     rels = [db[r] for r in query.relations]
-    dicts = build_dictionaries(rels, all_attrs)
+    dicts = build_dictionaries(rels, all_attrs, growable=growable)
 
     measure = query.agg.measure
     encoded: dict[str, EncodedRelation] = {}
@@ -207,9 +222,15 @@ def finish_prepare(
     measure = query.agg.measure
     keep = {measure[0]} if measure else set()
     encoded = dict(encoded)
-    encoded, folded, relevant, moved = _fold_leaf_multipliers(
+    encoded, folded, relevant, moved, host_of = _fold_leaf_multipliers(
         schema, encoded, dicts, keep
     )
+    fold_hosts: dict[str, str] = {}
+    for f in folded:
+        cur = f
+        while cur in host_of:
+            cur = host_of[cur]
+        fold_hosts[f] = cur
 
     if measure and measure[0] in moved:
         # the measure relation folded away; re-point the aggregate at the
@@ -236,10 +257,18 @@ def finish_prepare(
 
     hg = Hypergraph({r: frozenset(relevant[r]) for r in encoded})
     deco = decompose(schema, hg, root=root)
-    return Prepared(query, schema, dicts, encoded, deco, folded)
+    return Prepared(query, schema, dicts, encoded, deco, folded, fold_hosts)
 
 
-def prepare(query: JoinAggQuery, db: Database, root: str | None = None) -> Prepared:
+def prepare(
+    query: JoinAggQuery,
+    db: Database,
+    root: str | None = None,
+    growable: bool = False,
+) -> Prepared:
+    """``growable=True`` builds :class:`GrowableDictionary` encoders so the
+    result can be maintained under inserts/deletes (``repro.incremental``):
+    new attribute values append codes and domains only ever grow."""
     schema = resolve_schema(query, db)
-    dicts, encoded = encode_query(query, db, schema)
+    dicts, encoded = encode_query(query, db, schema, growable=growable)
     return finish_prepare(query, schema, dicts, encoded, root=root)

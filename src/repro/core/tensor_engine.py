@@ -89,16 +89,57 @@ class TensorEngine:
     def _canon_sort(self, gattrs: list[str]) -> list[str]:
         return sorted(gattrs, key=self.canonical.index)
 
-    def message(self, rel: str, parent: str | None) -> Message:
-        """Compute the upward message of ``rel``'s subtree."""
+    def _contract_block(
+        self,
+        weights: np.ndarray,
+        gathers: list[tuple[np.ndarray, np.ndarray]],
+        keys: np.ndarray,
+        knum: int,
+    ) -> np.ndarray:
+        """Gather-product-scatter hot loop of :meth:`contract_rows`:
+        ``out[keys[i]] += w[i] * Π_c m2_c[idx_c[i]]`` (outer product over
+        the children's group axes).  Overridable — the kernel engine in
+        ``repro.incremental.jax_delta`` dispatches this to the Pallas
+        ``coo_spmm``/``segment_sum`` kernels."""
+        n = len(weights)
+        if n == 0:  # reshape(0, -1) below is ill-defined for numpy
+            width = 1
+            for m2, _ in gathers:
+                width *= m2.shape[1]
+            return np.zeros((knum, width), dtype=np.float64)
+        vals = weights.reshape(n, 1)
+        for m2, idx in gathers:
+            rows = m2[idx]  # (n, Gc)
+            vals = (vals[:, :, None] * rows[:, None, :]).reshape(n, -1)
+        return _segment_sum(keys, vals, knum)
+
+    def contract_rows(
+        self,
+        rel: str,
+        parent: str | None,
+        codes: np.ndarray,
+        weights: np.ndarray,
+        child_msgs: dict[str, "Message"],
+    ) -> Message:
+        """Contract the given COO rows of ``rel`` against ``child_msgs``.
+
+        The shared primitive behind both the full leaves→root pass
+        (:meth:`message`, where ``codes``/``weights`` are the whole
+        encoded relation) and incremental maintenance (DESIGN.md §4,
+        where ``codes`` are a *delta block* — or the parent rows matched
+        to one — and a child's entry is its delta message).  Children are
+        always consumed in decomposition order, so the output attr order
+        is identical for both callers and delta arrays add elementwise
+        onto cached ones.
+        """
         er = self.encoded[rel]
         node = self.deco.nodes[rel]
-        n = er.num_rows
-        vals = self._weights(rel).reshape(n, 1)
+        n = len(weights)
 
+        gathers: list[tuple[np.ndarray, np.ndarray]] = []  # (child m2, row idx)
         child_gattrs: list[str] = []
         for child in node.children:
-            msg = self.message(child, rel)
+            msg = child_msgs[child]
             shared = msg.attrs[: msg.num_shared]
             pos = [er.attrs.index(a) for a in shared]
             sh_dims = self._dims(shared)
@@ -109,12 +150,11 @@ class TensorEngine:
             )
             if pos:
                 idx = np.ravel_multi_index(
-                    tuple(er.codes[:, p] for p in pos), dims=sh_dims
+                    tuple(codes[:, p] for p in pos), dims=sh_dims
                 )
             else:
                 idx = np.zeros(n, dtype=np.int64)
-            rows = m2[idx]  # (n, Gc)
-            vals = (vals[:, :, None] * rows[:, None, :]).reshape(n, -1)
+            gathers.append((m2, idx))
             child_gattrs.extend(msg.group_attrs)
 
         own_g = self.prep.schema.group_of.get(rel)
@@ -130,12 +170,12 @@ class TensorEngine:
         kpos = [er.attrs.index(a) for a in kept_own]
         if kpos:
             keys = np.ravel_multi_index(
-                tuple(er.codes[:, p] for p in kpos), dims=kept_dims
+                tuple(codes[:, p] for p in kpos), dims=kept_dims
             )
         else:
             keys = np.zeros(n, dtype=np.int64)
         knum = int(np.prod(kept_dims, dtype=np.int64)) if kept_dims else 1
-        out2 = _segment_sum(keys.astype(np.int64), vals, knum)
+        out2 = self._contract_block(weights, gathers, keys.astype(np.int64), knum)
         if self.boolean:
             out2 = (out2 > 0).astype(np.float64)
 
@@ -149,6 +189,17 @@ class TensorEngine:
         arr = np.transpose(arr, perm) if perm != list(range(len(perm))) else arr
         self.peak_message_bytes = max(self.peak_message_bytes, arr.nbytes)
         return Message(tuple(want), len(up_attrs), arr)
+
+    def message(self, rel: str, parent: str | None) -> Message:
+        """Compute the upward message of ``rel``'s subtree."""
+        er = self.encoded[rel]
+        child_msgs = {
+            child: self.message(child, rel)
+            for child in self.deco.nodes[rel].children
+        }
+        return self.contract_rows(
+            rel, parent, er.codes, self._weights(rel), child_msgs
+        )
 
     def run(self) -> np.ndarray:
         """Dense result tensor over canonical group axes."""

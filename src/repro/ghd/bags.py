@@ -195,6 +195,11 @@ class BagTable:
     count: np.ndarray
     payloads: dict[str, np.ndarray]
     peak_bytes: int  # working-set high-water mark during materialization
+    # every input relation whose tuples influenced this bag (assigned
+    # relations + filler projections) — the incremental maintainer
+    # invalidates exactly the bags whose sources a delta touches
+    # (DESIGN.md §4); a relation not listed here cannot change the bag
+    sources: tuple[str, ...] = ()
 
     @property
     def num_rows(self) -> int:
@@ -215,6 +220,7 @@ def materialize_bag(
     """Join the bag's factors and pre-aggregate onto ``out_attrs``."""
     budget = BagJoinBudget(cap_rows)
     factors = [factor_from_encoded(encoded[r]) for r in bag.relations]
+    sources = list(bag.relations)
 
     covered: set[str] = set()
     for f in factors:
@@ -237,6 +243,7 @@ def materialize_bag(
             if not gain:
                 continue
             factors.append(filler_factor(er, take))
+            sources.append(r)
             covered |= set(take)
             missing = [a for a in out_attrs if a not in covered]
             if not missing:
@@ -260,5 +267,6 @@ def materialize_bag(
     out = aggregate_factor(acc, out_attrs, bag.name)
     budget.charge(acc.nbytes() + out.nbytes())  # both alive during aggregation
     return BagTable(
-        bag.name, out.attrs, out.codes, out.count, out.payloads, budget.peak_bytes
+        bag.name, out.attrs, out.codes, out.count, out.payloads,
+        budget.peak_bytes, tuple(dict.fromkeys(sources)),
     )

@@ -52,6 +52,20 @@ class GHDPlan:
     prepared: Prepared  # ready for all three engines
     copied_attrs: dict[str, str]  # original group attr -> copy column
     bag_peak_bytes: int  # high-water working set of bag materialization
+    # pre-fold derived pipeline inputs, retained so the incremental
+    # maintainer can re-finish_prepare after re-materializing dirty bags
+    derived_schema: QuerySchema = None  # type: ignore[assignment]
+    derived_dicts: dict[str, Dictionary] = None  # type: ignore[assignment]
+    bag_out_attrs: dict[str, tuple[str, ...]] = None  # type: ignore[assignment]
+
+    def invalidated_bags(self, rel: str) -> list[str]:
+        """Bags whose materialization a delta on input relation ``rel``
+        can change (assigned relations and filler sources alike) — the
+        dirty set; every other bag table is reusable verbatim."""
+        return [
+            b for b in self.ghd.order
+            if rel in self.bag_tables[b].sources
+        ]
 
     @property
     def est_width_elems(self) -> int:
@@ -62,7 +76,8 @@ def _append_copy_column(bt: BagTable, src: str, copy: str) -> BagTable:
     i = bt.attrs.index(src)
     codes = np.concatenate([bt.codes, bt.codes[:, i : i + 1]], axis=1)
     return BagTable(
-        bt.name, bt.attrs + (copy,), codes, bt.count, bt.payloads, bt.peak_bytes
+        bt.name, bt.attrs + (copy,), codes, bt.count, bt.payloads,
+        bt.peak_bytes, bt.sources,
     )
 
 
@@ -71,12 +86,22 @@ def compile_ghd(
     db: Database,
     root: str | None = None,
     cap_rows: int = MAX_DENSE_ELEMS,
+    schema: QuerySchema | None = None,
+    dicts: dict[str, Dictionary] | None = None,
+    encoded: dict[str, EncodedRelation] | None = None,
 ) -> GHDPlan:
-    """Compile a (cyclic) query down to the acyclic JOIN-AGG pipeline."""
+    """Compile a (cyclic) query down to the acyclic JOIN-AGG pipeline.
+
+    ``schema``/``dicts``/``encoded`` let a caller that already holds the
+    encoded input state (the incremental maintainer, which keeps it live
+    under deltas) skip re-encoding the database.
+    """
     if not query.group_by:
         raise ValueError("query needs at least one group-by attribute")
-    schema = resolve_schema(query, db, allow_group_join_attrs=True)
-    dicts, encoded = encode_query(query, db, schema)
+    if schema is None:
+        schema = resolve_schema(query, db, allow_group_join_attrs=True)
+    if dicts is None or encoded is None:
+        dicts, encoded = encode_query(query, db, schema)
 
     edges = {r: frozenset(schema.relevant[r]) for r in query.relations}
     domains = {a: dicts[a].size for attrs in edges.values() for a in attrs}
@@ -113,6 +138,7 @@ def compile_ghd(
     # --- materialize each bag, projected to its derived-relevant attrs ---
     bag_tables: dict[str, BagTable] = {}
     relevant_d: dict[str, tuple[str, ...]] = {}
+    bag_out_attrs: dict[str, tuple[str, ...]] = {}
     for b in ghd.order:
         bag = ghd.bags[b]
         gattr = group_attr_of_bag.get(b)
@@ -125,6 +151,7 @@ def compile_ghd(
                 f"bag {b!r} shares no attrs with the rest of the query "
                 "(cross product: unsupported)"
             )
+        bag_out_attrs[b] = out_attrs
         bt = materialize_bag(bag, encoded, out_attrs, cap_rows=cap_rows)
         if gattr in copy_src:
             bt = _append_copy_column(bt, copy_src[gattr], gattr)
@@ -169,7 +196,9 @@ def compile_ghd(
         prep = finish_prepare(derived_query, schema_d, dicts_d, encoded_d, root=root)
     else:
         best: tuple[Prepared, int] | None = None
-        for cand in {b for b, _ in derived_group_by}:
+        # sorted: peak ties must not depend on set (string-hash) order,
+        # or the chosen root varies across processes
+        for cand in sorted({b for b, _ in derived_group_by}):
             try:
                 p = finish_prepare(
                     derived_query, schema_d, dicts_d, encoded_d, root=cand
@@ -193,6 +222,9 @@ def compile_ghd(
         prepared=prep,
         copied_attrs=copied,
         bag_peak_bytes=bag_peak,
+        derived_schema=schema_d,
+        derived_dicts=dicts_d,
+        bag_out_attrs=bag_out_attrs,
     )
 
 

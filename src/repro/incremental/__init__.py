@@ -1,0 +1,22 @@
+"""Incremental JOIN-AGG maintenance (DESIGN.md §4).
+
+``prepare()`` once, then apply batched inserts/deletes with refresh cost
+proportional to the delta's dirty root-path — not the database:
+
+    handle = MaintainedJoinAgg(query, db)        # or operator.maintain()
+    handle.insert("R2", {"j": ..., "b": ...})
+    handle.delete("R2", {"j": ..., "b": ...})
+    handle.result()   # identical to join_agg(query, current_db)
+"""
+from repro.incremental.delta import DeltaBatch, MaintainedRelation, encode_delta
+from repro.incremental.maintained import MaintainedJoinAgg, RefreshStats
+from repro.incremental.planner import MessageCache
+
+__all__ = [
+    "DeltaBatch",
+    "MaintainedRelation",
+    "encode_delta",
+    "MaintainedJoinAgg",
+    "RefreshStats",
+    "MessageCache",
+]

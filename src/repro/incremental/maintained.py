@@ -1,0 +1,539 @@
+"""``MaintainedJoinAgg``: a JOIN-AGG handle with sub-recompute refresh.
+
+``prepare()`` happens once; after that, :meth:`insert` / :meth:`delete`
+apply *batched* deltas by
+
+1. extending the shared dictionary encodings in place (new codes append,
+   domains grow monotonically — cached tensors only ever zero-pad),
+2. re-running load-time pre-aggregation on the delta batch only
+   (:func:`repro.incremental.delta.encode_delta`), and
+3. re-propagating messages only along the dirty root-path
+   (:class:`repro.incremental.planner.MessageCache`), exploiting
+   distributivity: ``msg' = msg ⊕ Δmsg`` for COUNT/SUM/AVG.
+
+Engine coverage (DESIGN.md §4):
+
+* ``tensor`` — numpy delta contraction (all aggregates).
+* ``jax``    — the same dirty-path plan with the per-hop contractions on
+  the Pallas ``coo_spmm``/``segment_sum`` kernels over the delta COO
+  blocks (COUNT/SUM, float32 — mirroring the batch jax engine).
+* ``ref``    — the paper-faithful engine re-walks only *dirty sources*:
+  the delta is semi-joined outward through the decomposition tree, and
+  the data-graph DFS runs on that restricted (signed) sub-database; its
+  contribution adds onto the cached result by linearity of COUNT.
+
+Non-invertible cases fall back to a path recompute over the maintained
+encoded state (never a re-encode of the unchanged data): MIN/MAX under
+deletes (payload rebuilt from retained raw tuples), and any query whose
+fold rewrite baked a dirty relation into a host.  Cyclic queries compose
+with the GHD compiler: a delta re-materializes only the bags whose
+sources it touches; clean bag tables are reused verbatim.
+
+Refresh work and ``peak_delta_bytes`` are tracked in :attr:`stats`, so
+the paper's memory-efficiency claim extends to maintenance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.prepare import Prepared, encode_query, finish_prepare
+from repro.core.query import JoinAggQuery, resolve_schema
+from repro.incremental.delta import DeltaBatch, MaintainedRelation, encode_delta
+from repro.incremental.planner import MessageCache
+from repro.relational.encoding import EncodedRelation, encode_relation
+from repro.relational.relation import Database, Relation
+
+
+@dataclass
+class RefreshStats:
+    """Counters for maintenance work (reset never; deltas accumulate)."""
+
+    refreshes: int = 0
+    delta_rows: int = 0  # pre-aggregated delta rows applied
+    rows_rescanned: int = 0  # ancestor rows re-contracted on dirty paths
+    fallback_recomputes: int = 0  # non-invertible / fold-path recomputes
+    dirty_bags: int = 0  # GHD bags re-materialized
+    clean_bags_reused: int = 0  # GHD bags reused verbatim
+    peak_delta_bytes: int = 0  # high-water delta working set
+
+    def charge(self, nbytes: int) -> None:
+        self.peak_delta_bytes = max(self.peak_delta_bytes, nbytes)
+
+
+def _columns_of(tuples) -> dict[str, np.ndarray]:
+    if isinstance(tuples, Relation):
+        return {a: tuples.columns[a] for a in tuples.attrs}
+    return {a: np.asarray(c) for a, c in tuples.items()}
+
+
+class MaintainedJoinAgg:
+    """A prepared JOIN-AGG query maintained under inserts and deletes."""
+
+    def __init__(
+        self,
+        query: JoinAggQuery,
+        db: Database,
+        engine: str = "tensor",
+        interpret: bool | None = None,
+    ):
+        from repro.ghd.rewrite import is_cyclic_query
+
+        if engine not in ("tensor", "jax", "ref"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.query = query
+        self.engine = engine
+        self.interpret = interpret
+        self.kind = query.agg.kind
+        self.stats = RefreshStats()
+        if engine == "ref" and self.kind != "count":
+            raise NotImplementedError("ref engine maintains COUNT only")
+        if engine == "jax" and self.kind not in ("count", "sum"):
+            raise NotImplementedError(
+                "jax engine maintains COUNT/SUM (others on tensor engine)"
+            )
+        self.cyclic = is_cyclic_query(query, db)
+        self._init_raw(query, db)
+        if self.cyclic:
+            self._init_cyclic(query, db)
+        else:
+            self._init_acyclic(query, db)
+
+    # ------------------------------------------------------------------
+    # shared construction
+    # ------------------------------------------------------------------
+    def _init_raw(self, query: JoinAggQuery, db: Database) -> None:
+        """MIN/MAX payloads are non-invertible; retain the measure
+        relation's raw tuples so deletes can rebuild them."""
+        self.raw: dict[str, np.ndarray] | None = None
+        if self.kind in ("min", "max"):
+            rel, attr = query.agg.measure
+            self.raw = {
+                a: np.asarray(c).copy() for a, c in db[rel].columns.items()
+            }
+
+    def _init_acyclic(self, query: JoinAggQuery, db: Database) -> None:
+        self.schema = resolve_schema(query, db)
+        self.dicts, encoded = encode_query(query, db, self.schema, growable=True)
+        self.base = {r: MaintainedRelation(er) for r, er in encoded.items()}
+        self.prep = finish_prepare(query, self.schema, self.dicts, encoded)
+        self.fold_mode = bool(self.prep.folded)
+        self._sync_fold_affected()
+        self.caches: dict[str, MessageCache] | None = None
+        if self.kind in ("min", "max"):
+            self.result_dict = self._full_result()
+        elif self.engine == "ref":
+            from repro.core.ref_engine import execute_ref
+
+            self.result_dict = execute_ref(self.prep.query, None, prep=self.prep)
+        else:
+            self._build_caches()
+            self.result_dict = self._decode_full()
+
+    def _sync_fold_affected(self) -> None:
+        """Relations whose maintained encoding the fold rewrite replaced
+        (folded relations via ``Prepared.fold_hosts``, their hosts, and
+        any relation the dead-attr projection re-aggregated — detected by
+        object identity): a delta there invalidates the fold itself, so
+        it routes to :meth:`_refresh_fold`; every other relation's delta
+        propagates along its dirty path even in fold mode."""
+        self._fold_affected = (
+            set(self.prep.fold_hosts)
+            | set(self.prep.fold_hosts.values())
+            | {
+                r for r in self.prep.encoded
+                if self.prep.encoded[r] is not self.base[r].er
+            }
+        )
+
+    def _cache_specs(self) -> dict[str, str | None]:
+        measure = self.prep.query.agg.measure
+        if self.kind == "count":
+            return {"count": None}
+        if self.kind == "sum":
+            return {"sum": measure[0]}
+        if self.kind == "avg":
+            return {"count": None, "sum": measure[0]}
+        raise AssertionError(self.kind)
+
+    def _build_caches(self) -> None:
+        factory, dtype = None, np.float64
+        if self.engine == "jax":
+            from functools import partial
+
+            from repro.incremental.jax_delta import KernelDeltaEngine
+
+            factory = partial(KernelDeltaEngine, interpret=self.interpret)
+            dtype = np.float32
+        self.caches = {
+            name: MessageCache(self.prep, mrel, factory, dtype)
+            for name, mrel in self._cache_specs().items()
+        }
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def insert(self, rel: str, tuples) -> dict[tuple, float]:
+        """Apply a batch of inserted tuples to ``rel``; returns the
+        refreshed result."""
+        return self._apply(rel, _columns_of(tuples), +1)
+
+    def delete(self, rel: str, tuples) -> dict[tuple, float]:
+        """Apply a batch of deleted tuples to ``rel`` (each tuple must be
+        present; over-deletes raise); returns the refreshed result."""
+        return self._apply(rel, _columns_of(tuples), -1)
+
+    def result(self) -> dict[tuple, float]:
+        """The current group → aggregate map (no recomputation)."""
+        return dict(self.result_dict)
+
+    # ------------------------------------------------------------------
+    # delta application
+    # ------------------------------------------------------------------
+    def _apply(self, rel: str, cols: dict[str, np.ndarray], sign: int):
+        if rel not in self.query.relations:
+            raise KeyError(f"relation {rel!r} not in query")
+        self.stats.refreshes += 1
+        measure = self.query.agg.measure
+        m_attr = measure[1] if (measure and measure[0] == rel) else None
+        attrs = self.schema.relevant[rel]
+        raw_applies = (
+            self.raw is not None and measure is not None and rel == measure[0]
+        )
+        if raw_applies:
+            missing = [a for a in self.raw if a not in cols]
+            if missing:
+                raise ValueError(
+                    f"delta for {rel!r} must carry columns {missing} "
+                    "(MIN/MAX retains full raw tuples)"
+                )
+        delta = encode_delta(
+            rel, attrs, cols, self.dicts, measure=m_attr, sign=sign
+        )
+        if delta.num_rows == 0:
+            return self.result()
+        self.stats.delta_rows += delta.num_rows
+        self.stats.charge(delta.nbytes())
+        # deletes validate against the raw multiset first: if any tuple is
+        # absent this raises with NO state mutated; raw success implies the
+        # projected (pre-aggregated) delete succeeds too
+        if raw_applies and sign < 0:
+            self._update_raw(cols, sign)
+        self.base[rel].apply(delta)
+        if raw_applies and sign > 0:
+            self._update_raw(cols, sign)
+
+        if self.cyclic:
+            self._refresh_cyclic(rel)
+        elif self.kind in ("min", "max"):
+            self._refresh_minmax(rel)
+        elif self.fold_mode and rel in self._fold_affected:
+            self._refresh_fold(rel)
+        elif self.engine == "ref":
+            self._refresh_ref(rel, delta)
+        else:
+            self._refresh_propagate(rel, delta)
+        return self.result()
+
+    # --- dirty-path propagation (COUNT/SUM/AVG on tensor/jax) ---------
+    def _refresh_propagate(self, rel: str, delta: DeltaBatch) -> None:
+        droots = {}
+        for name, cache in self.caches.items():
+            cache.sync_domains()
+            if name == "sum" and rel == cache.measure_rel:
+                weights = delta.payloads["sum"]
+            else:
+                weights = delta.count.astype(np.float64)
+            before = cache.rows_rescanned
+            droots[name] = cache.propagate(rel, delta.codes, weights)
+            self.stats.rows_rescanned += cache.rows_rescanned - before
+            self.stats.charge(cache.peak_delta_bytes)
+        self._update_result(droots)
+
+    def _root_value_arrays(self) -> dict[str, np.ndarray]:
+        return {name: c.root_array for name, c in self.caches.items()}
+
+    def _values_at(self, idxs: np.ndarray) -> np.ndarray:
+        roots = self._root_value_arrays()
+        sel = tuple(idxs[:, i] for i in range(idxs.shape[1]))
+        if self.kind == "count":
+            return roots["count"][sel]
+        if self.kind == "sum":
+            return roots["sum"][sel]
+        cnt, s = roots["count"][sel], roots["sum"][sel]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(cnt > 0, s / np.maximum(cnt, 1), 0.0)
+
+    def _decode_keys(self, idxs: np.ndarray) -> list[tuple]:
+        cols = [
+            self.dicts[attr].decode(idxs[:, i])
+            for i, (_, attr) in enumerate(self.prep.group_attrs)
+        ]
+        return [tuple(c[j] for c in cols) for j in range(len(idxs))]
+
+    def _decode_full(self) -> dict[tuple, float]:
+        from repro.core.tensor_engine import _decode_result
+
+        # decode the value array with the batch engine's own decoder so
+        # the maintained result can never drift from join_agg's semantics
+        if self.kind == "avg":
+            source = self._avg_array()
+        else:
+            source = self._root_value_arrays()[self.kind]
+        return _decode_result(self.prep, np.asarray(source, dtype=np.float64))
+
+    def _avg_array(self) -> np.ndarray:
+        roots = self._root_value_arrays()
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(
+                roots["count"] > 0,
+                roots["sum"] / np.maximum(roots["count"], 1),
+                0.0,
+            )
+
+    def _update_result(self, droots: dict[str, np.ndarray | None]) -> None:
+        parts = [
+            np.stack(np.nonzero(d), axis=1)
+            for d in droots.values() if d is not None
+        ]
+        parts = [p for p in parts if len(p)]
+        if not parts:
+            return
+        idxs = np.unique(np.concatenate(parts, axis=0), axis=0)
+        vals = self._values_at(idxs)
+        for key, v in zip(self._decode_keys(idxs), vals):
+            v = float(v)
+            if v == 0.0:
+                self.result_dict.pop(key, None)
+            else:
+                self.result_dict[key] = v
+
+    # --- ref engine: re-walk only dirty sources ----------------------
+    def _refresh_ref(self, rel: str, delta: DeltaBatch) -> None:
+        """Semi-join the delta outward through the decomposition tree and
+        run the data-graph DFS on the restricted signed sub-database; the
+        restricted root rows are exactly the *dirty sources*, and by
+        linearity of COUNT the contribution adds onto the cached result."""
+        from repro.core.ref_engine import execute_ref
+
+        if delta.num_rows == 0:
+            return
+        deco = self.prep.decomposition
+        enc: dict[str, EncodedRelation] = {
+            rel: EncodedRelation(rel, delta.attrs, delta.codes, delta.count, {})
+        }
+        queue = [rel]
+        while queue:
+            a = queue.pop(0)
+            na = deco.nodes[a]
+            for b in list(na.children) + ([na.parent] if na.parent else []):
+                if b in enc:
+                    continue
+                # the folded plan's encodings (== the maintained ones for
+                # every fold-unaffected relation)
+                eb = self.prep.encoded[b]
+                ea = enc[a]
+                shared = [x for x in eb.attrs if x in set(ea.attrs)]
+                bi = [eb.attrs.index(x) for x in shared]
+                ai = [ea.attrs.index(x) for x in shared]
+                mask = _member_mask(eb.codes[:, bi], ea.codes[:, ai])
+                enc[b] = EncodedRelation(
+                    b, eb.attrs, eb.codes[mask], eb.count[mask], {}
+                )
+                self.stats.rows_rescanned += int(mask.sum())
+                queue.append(b)
+        small = Prepared(
+            self.prep.query, self.prep.schema, self.dicts, enc,
+            deco, self.prep.folded, self.prep.fold_hosts,
+        )
+        self.stats.charge(
+            sum(e.codes.nbytes + e.count.nbytes for e in enc.values())
+        )
+        contribution = execute_ref(self.prep.query, None, prep=small)
+        for k, v in contribution.items():
+            nv = self.result_dict.get(k, 0.0) + v
+            if nv == 0.0:
+                self.result_dict.pop(k, None)
+            else:
+                self.result_dict[k] = nv
+
+    # --- fallbacks ----------------------------------------------------
+    def _current_encoded(self, live: bool) -> dict[str, EncodedRelation]:
+        """``live=True`` drops zero-count rows (required by MIN/MAX whose
+        payload reductions ignore multiplicities — but it copies, so the
+        COUNT/SUM paths keep the real, identity-stable arrays instead)."""
+        if live:
+            return {r: m.live_view() for r, m in self.base.items()}
+        return {r: m.er for r, m in self.base.items()}
+
+    def _full_result(self) -> dict[tuple, float]:
+        """Path recompute over the maintained encoded state (the MIN/MAX
+        non-invertible fallback): re-derives the fold and the contraction,
+        but never re-encodes the unchanged data."""
+        self.prep = finish_prepare(
+            self.query, self.schema, self.dicts, self._current_encoded(live=True)
+        )
+        from repro.core.tensor_engine import execute_tensor
+
+        return execute_tensor(self.prep.query, None, prep=self.prep)
+
+    def _refresh_fold(self, rel: str) -> None:
+        """The delta invalidated the fold rewrite itself: re-derive the
+        fold from the maintained (never re-encoded) relations, rebuild
+        the message caches over the new plan, and recompute."""
+        self.stats.fallback_recomputes += 1
+        self.prep = finish_prepare(
+            self.query, self.schema, self.dicts, self._current_encoded(live=False)
+        )
+        self._sync_fold_affected()
+        if self.engine == "ref":
+            from repro.core.ref_engine import execute_ref
+
+            self.result_dict = execute_ref(self.prep.query, None, prep=self.prep)
+        else:
+            self._build_caches()
+            self.result_dict = self._decode_full()
+
+    def _refresh_minmax(self, rel: str) -> None:
+        measure = self.query.agg.measure
+        if self.base[measure[0]].minmax_stale:
+            self._rebuild_measure_payloads()
+        self.stats.fallback_recomputes += 1
+        self.result_dict = self._full_result()
+
+    def _rebuild_measure_payloads(self) -> None:
+        rel, attr = self.query.agg.measure
+        er = encode_relation(
+            Relation(rel, dict(self.raw)), self.schema.relevant[rel],
+            self.dicts, attr,
+        )
+        self.base[rel] = MaintainedRelation(er)
+
+    def _update_raw(self, cols: dict[str, np.ndarray], sign: int) -> None:
+        attrs = list(self.raw)
+        if sign > 0:
+            for a in attrs:
+                self.raw[a] = np.concatenate([self.raw[a], np.asarray(cols[a])])
+            return
+        # vectorized multiset removal: group raw+batch rows by exact
+        # per-column value (no cross-dtype promotion), then drop the first
+        # want[g] raw rows of each group — raising, with nothing mutated,
+        # if any group is over-deleted
+        n_raw = len(self.raw[attrs[0]])
+        n_del = len(np.asarray(cols[attrs[0]]))
+        raw_codes, del_codes = [], []
+        for a in attrs:
+            both = np.concatenate([self.raw[a], np.asarray(cols[a])])
+            _, inv = np.unique(both, return_inverse=True)
+            inv = inv.ravel()
+            raw_codes.append(inv[:n_raw])
+            del_codes.append(inv[n_raw:])
+        both = np.concatenate(
+            [np.stack(raw_codes, axis=1), np.stack(del_codes, axis=1)]
+        )
+        _, inv = np.unique(both, axis=0, return_inverse=True)
+        inv = inv.ravel()
+        g_raw, g_del = inv[:n_raw], inv[n_raw:]
+        groups = int(inv.max()) + 1 if len(inv) else 0
+        want = np.bincount(g_del, minlength=groups)
+        have = np.bincount(g_raw, minlength=groups)
+        if (want > have).any():
+            raise ValueError(
+                f"delete from {self.query.agg.measure[0]!r}: "
+                f"{int((want - have).clip(min=0).sum())} tuple(s) not present"
+            )
+        order = np.argsort(g_raw, kind="stable")
+        gs = g_raw[order]
+        sizes = np.bincount(gs, minlength=groups)
+        starts = np.concatenate([[0], np.cumsum(sizes)])[gs]
+        rank = np.arange(n_raw) - starts
+        keep = np.ones(n_raw, dtype=bool)
+        keep[order] = rank >= want[gs]
+        for a in attrs:
+            self.raw[a] = self.raw[a][keep]
+
+    # ------------------------------------------------------------------
+    # cyclic queries: GHD bag invalidation
+    # ------------------------------------------------------------------
+    def _init_cyclic(self, query: JoinAggQuery, db: Database) -> None:
+        from repro.ghd.rewrite import compile_ghd
+
+        self.schema = resolve_schema(query, db, allow_group_join_attrs=True)
+        self.dicts, encoded = encode_query(query, db, self.schema, growable=True)
+        self.base = {r: MaintainedRelation(er) for r, er in encoded.items()}
+        self.plan = compile_ghd(
+            query, db, schema=self.schema, dicts=self.dicts, encoded=encoded
+        )
+        self.fold_mode = False
+        self.caches = None
+        # copy column -> source attr (for re-appending after rebuild)
+        self._copy_of = {c: g for g, c in self.plan.copied_attrs.items()}
+        self.prep = self.plan.prepared
+        self._derived_root = self.prep.decomposition.root
+        self.result_dict = self._run_derived()
+
+    def _run_derived(self) -> dict[tuple, float]:
+        prep = self.prep
+        if self.engine == "ref":
+            from repro.core.ref_engine import execute_ref
+
+            return execute_ref(prep.query, None, prep=prep)
+        if self.engine == "jax":
+            from repro.core.jax_engine import execute_jax
+
+            return execute_jax(prep.query, None, prep=prep)
+        from repro.core.tensor_engine import execute_tensor
+
+        return execute_tensor(prep.query, None, prep=prep)
+
+    def _refresh_cyclic(self, rel: str) -> None:
+        from repro.ghd.bags import materialize_bag
+        from repro.ghd.rewrite import _append_copy_column
+
+        if self.kind in ("min", "max") and self.base[
+            self.query.agg.measure[0]
+        ].minmax_stale:
+            self._rebuild_measure_payloads()
+        plan = self.plan
+        dirty = plan.invalidated_bags(rel)
+        self.stats.dirty_bags += len(dirty)
+        self.stats.clean_bags_reused += len(plan.bag_tables) - len(dirty)
+        current = self._current_encoded(live=True)
+        schema_d = plan.derived_schema
+        for b in dirty:
+            bt = materialize_bag(
+                plan.ghd.bags[b], current, plan.bag_out_attrs[b]
+            )
+            gattr = schema_d.group_of.get(b)
+            if gattr in self._copy_of:
+                bt = _append_copy_column(bt, self._copy_of[gattr], gattr)
+            plan.bag_tables[b] = bt
+            self.stats.charge(bt.peak_bytes)
+        # copied-attr dictionaries track their (grown) source domains
+        for g, copy in plan.copied_attrs.items():
+            plan.derived_dicts[copy].values = self.dicts[g].values
+        encoded_d = {b: bt.to_encoded() for b, bt in plan.bag_tables.items()}
+        try:
+            self.prep = finish_prepare(
+                plan.derived_query, schema_d, plan.derived_dicts, encoded_d,
+                root=self._derived_root,
+            )
+        except ValueError:  # the fold rewrite consumed the stored root
+            self.prep = finish_prepare(
+                plan.derived_query, schema_d, plan.derived_dicts, encoded_d
+            )
+        self.result_dict = self._run_derived()
+
+
+def _member_mask(rows: np.ndarray, members: np.ndarray) -> np.ndarray:
+    """Mask of ``rows`` whose key tuple occurs in ``members`` (same cols)."""
+    if rows.shape[1] == 0:
+        return np.ones(len(rows), dtype=bool)
+    allk, inv = np.unique(
+        np.concatenate([members, rows], axis=0), axis=0, return_inverse=True
+    )
+    inv = inv.ravel()
+    im, ir = inv[: len(members)], inv[len(members):]
+    return np.isin(ir, np.unique(im))

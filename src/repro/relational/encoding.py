@@ -37,17 +37,54 @@ class Dictionary:
         return self.values[np.asarray(codes)]
 
 
+class GrowableDictionary(Dictionary):
+    """A :class:`Dictionary` whose domain grows monotonically.
+
+    Unknown values passed to :meth:`encode` with ``grow=True`` are
+    *appended* to the value table, so existing codes never move — every
+    cached message / result tensor indexed by old codes stays valid and
+    only needs zero-padding on the grown axes (DESIGN.md §4).  Values are
+    therefore sorted only within the initial segment; lookups go through
+    a maintained sort permutation instead of assuming global order.
+    """
+
+    def __init__(self, attr: str, values: np.ndarray):
+        super().__init__(attr, np.asarray(values))
+        self._order = np.argsort(self.values, kind="stable")
+
+    def encode(self, col: np.ndarray, grow: bool = False) -> np.ndarray:
+        col = np.asarray(col)
+        if self.size:
+            sv = self.values[self._order]
+            pos = np.clip(np.searchsorted(sv, col), 0, self.size - 1)
+            hit = sv[pos] == col
+        else:
+            pos = np.zeros(len(col), dtype=np.int64)
+            hit = np.zeros(len(col), dtype=bool)
+        if bool(np.all(hit)):
+            return self._order[pos].astype(np.int64)
+        if not grow:
+            raise ValueError(f"attr {self.attr!r}: values outside dictionary")
+        new_vals = np.unique(col[~hit])
+        self.values = (
+            np.concatenate([self.values, new_vals]) if self.size else new_vals
+        )
+        self._order = np.argsort(self.values, kind="stable")
+        return self.encode(col)
+
+
 def build_dictionaries(
-    relations: Iterable[Relation], attrs: Iterable[str]
+    relations: Iterable[Relation], attrs: Iterable[str], growable: bool = False
 ) -> dict[str, Dictionary]:
     """One shared dictionary per attribute name across all relations."""
     relations = list(relations)
+    cls = GrowableDictionary if growable else Dictionary
     out: dict[str, Dictionary] = {}
     for attr in attrs:
         parts = [r.columns[attr] for r in relations if attr in r.columns]
         if not parts:
             raise KeyError(f"attr {attr!r} not present in any relation")
-        out[attr] = Dictionary(attr, np.unique(np.concatenate(parts)))
+        out[attr] = cls(attr, np.unique(np.concatenate(parts)))
     return out
 
 
@@ -102,6 +139,30 @@ class EncodedRelation:
         return tuple(dicts[a].size for a in self.attrs)
 
 
+def preaggregate_rows(
+    codes: np.ndarray, measure_vals: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray, dict[str, np.ndarray]]:
+    """Load-time pre-aggregation of raw code rows (Section III-E):
+    collapse duplicate rows into ``(unique rows, count, payloads)``.
+    The single source of payload semantics for raw rows — shared by the
+    bulk loader (:func:`encode_relation`) and the incremental delta
+    encoder, so the maintained state cannot drift from the loader's."""
+    uniq, inverse = np.unique(codes, axis=0, return_inverse=True)
+    inverse = inverse.ravel()
+    count = np.bincount(inverse, minlength=len(uniq)).astype(np.int64)
+    payloads: dict[str, np.ndarray] = {}
+    if measure_vals is not None:
+        m = np.asarray(measure_vals, dtype=np.float64)
+        payloads["sum"] = np.bincount(inverse, weights=m, minlength=len(uniq))
+        mn = np.full(len(uniq), np.inf)
+        np.minimum.at(mn, inverse, m)
+        mx = np.full(len(uniq), -np.inf)
+        np.maximum.at(mx, inverse, m)
+        payloads["min"] = mn
+        payloads["max"] = mx
+    return uniq.astype(np.int64), count, payloads
+
+
 def encode_relation(
     rel: Relation,
     attrs: Iterable[str],
@@ -118,17 +179,7 @@ def encode_relation(
         raise ValueError(f"relation {rel.name!r}: empty projection")
     cols = [dicts[a].encode(rel.columns[a]) for a in attrs]
     codes = np.stack(cols, axis=1)
-    uniq, inverse = np.unique(codes, axis=0, return_inverse=True)
-    inverse = inverse.ravel()
-    count = np.bincount(inverse, minlength=len(uniq)).astype(np.int64)
-    payloads: dict[str, np.ndarray] = {}
-    if measure is not None:
-        m = np.asarray(rel.columns[measure], dtype=np.float64)
-        payloads["sum"] = np.bincount(inverse, weights=m, minlength=len(uniq))
-        mn = np.full(len(uniq), np.inf)
-        np.minimum.at(mn, inverse, m)
-        mx = np.full(len(uniq), -np.inf)
-        np.maximum.at(mx, inverse, m)
-        payloads["min"] = mn
-        payloads["max"] = mx
-    return EncodedRelation(rel.name, attrs, uniq.astype(np.int64), count, payloads)
+    uniq, count, payloads = preaggregate_rows(
+        codes, rel.columns[measure] if measure is not None else None
+    )
+    return EncodedRelation(rel.name, attrs, uniq, count, payloads)

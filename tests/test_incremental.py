@@ -1,0 +1,309 @@
+"""Incremental maintenance (repro.incremental, DESIGN.md §4): maintained
+results must equal a from-scratch ``join_agg`` over the mutated database,
+for every engine, aggregate, and fallback path."""
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Avg, Max, Min, Sum
+from repro.core.operator import join_agg, maintain
+from repro.core.query import JoinAggQuery
+from repro.incremental import MaintainedJoinAgg
+from repro.relational.encoding import GrowableDictionary
+from repro.relational.relation import Database
+
+RNG = np.random.default_rng(0)
+
+
+def star_cols(n=300, gdom=5, jdom=6, bdom=4, measure=False):
+    cols = {
+        "R1": {"g1": RNG.integers(0, gdom, n), "j": RNG.integers(0, jdom, n)},
+        "R2": {"j": RNG.integers(0, jdom, n), "b": RNG.integers(0, bdom, n)},
+        "R3": {"b": RNG.integers(0, bdom, n), "g2": RNG.integers(0, gdom, n)},
+    }
+    if measure:
+        cols["R2"]["m"] = RNG.integers(1, 40, n).astype(np.float64)
+    return cols
+
+
+def as_db(cols):
+    return Database.from_mapping({r: dict(c) for r, c in cols.items()})
+
+
+def with_extra(cols, rel, extra):
+    out = {r: {a: c.copy() for a, c in cs.items()} for r, cs in cols.items()}
+    for a, c in extra.items():
+        out[rel][a] = np.concatenate([out[rel][a], np.asarray(c)])
+    return out
+
+
+def without_prefix(cols, rel, k):
+    out = {r: {a: c.copy() for a, c in cs.items()} for r, cs in cols.items()}
+    out[rel] = {a: c[k:] for a, c in out[rel].items()}
+    return out
+
+
+def assert_close(got, want, tol=0.0):
+    assert set(got) == set(want), (len(got), len(want))
+    for k, v in want.items():
+        assert abs(got[k] - v) <= tol * max(1.0, abs(v)), (k, got[k], v)
+
+
+COUNT_Q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+
+
+def test_growable_dictionary_appends_codes():
+    d = GrowableDictionary("a", np.array([3, 7, 9]))
+    np.testing.assert_array_equal(d.encode(np.array([9, 3])), [2, 0])
+    codes = d.encode(np.array([5, 9, 5, 100]), grow=True)
+    # old codes unchanged, new values appended in sorted order of novelty
+    np.testing.assert_array_equal(d.encode(np.array([3, 7, 9])), [0, 1, 2])
+    assert d.size == 5
+    np.testing.assert_array_equal(d.decode(codes), [5, 9, 5, 100])
+    with pytest.raises(ValueError):
+        d.encode(np.array([42]))
+
+
+@pytest.mark.parametrize("engine", ["tensor", "ref", "jax"])
+def test_count_insert_delete_matches_scratch(engine):
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols), engine=engine)
+    tol = 1e-4 if engine == "jax" else 0.0
+    assert_close(h.result(), join_agg(COUNT_Q, as_db(cols)), tol)
+    extra = {"j": np.array([0, 1, 1, 2]), "b": np.array([3, 0, 2, 1])}
+    h.insert("R2", extra)
+    assert_close(
+        h.result(), join_agg(COUNT_Q, as_db(with_extra(cols, "R2", extra))), tol
+    )
+    h.delete("R2", extra)
+    assert_close(h.result(), join_agg(COUNT_Q, as_db(cols)), tol)
+
+
+@pytest.mark.parametrize("engine", ["tensor", "jax"])
+def test_domain_growth_new_codes(engine):
+    """Inserts carrying never-seen attribute values must grow the shared
+    dictionaries in place and zero-pad every cached message."""
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols), engine=engine)
+    extra1 = {"j": np.array([99, 99]), "b": np.array([0, 77])}   # new j, b
+    extra3 = {"b": np.array([77]), "g2": np.array([55])}         # new group val
+    h.insert("R2", extra1)
+    h.insert("R3", extra3)
+    mutated = with_extra(with_extra(cols, "R2", extra1), "R3", extra3)
+    tol = 1e-4 if engine == "jax" else 0.0
+    assert_close(h.result(), join_agg(COUNT_Q, as_db(mutated)), tol)
+
+
+def test_multi_relation_batches_and_root_delta():
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols))
+    mutated = cols
+    for rel, extra in [
+        ("R1", {"g1": np.array([0, 4]), "j": np.array([2, 2])}),
+        ("R3", {"b": np.array([1]), "g2": np.array([3])}),
+        ("R2", {"j": np.array([2]), "b": np.array([1])}),
+    ]:
+        h.insert(rel, extra)
+        mutated = with_extra(mutated, rel, extra)
+        assert_close(h.result(), join_agg(COUNT_Q, as_db(mutated)))
+
+
+def test_over_delete_raises():
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols))
+    with pytest.raises(ValueError):
+        h.delete("R2", {"j": np.array([999]), "b": np.array([999])})
+
+
+def test_rejected_delete_leaves_state_consistent():
+    """A batch mixing one present and one absent tuple must be rejected
+    atomically: later refreshes stay equal to from-scratch recompute."""
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols))
+    present = {a: cols["R2"][a][:1] for a in ("j", "b")}
+    mixed = {
+        "j": np.concatenate([present["j"], np.array([999])]),
+        "b": np.concatenate([present["b"], np.array([999])]),
+    }
+    with pytest.raises(ValueError):
+        h.delete("R2", mixed)
+    assert_close(h.result(), join_agg(COUNT_Q, as_db(cols)))
+    extra = {"j": np.array([0, 1]), "b": np.array([1, 2])}
+    h.insert("R2", extra)
+    assert_close(
+        h.result(), join_agg(COUNT_Q, as_db(with_extra(cols, "R2", extra)))
+    )
+
+
+def test_minmax_delete_missing_measure_column_is_atomic():
+    cols = star_cols(measure=True)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")),
+                     Min("R2", "m"))
+    h = MaintainedJoinAgg(q, as_db(cols))
+    with pytest.raises((ValueError, KeyError)):
+        h.delete("R2", {a: cols["R2"][a][:2] for a in ("j", "b")})  # no "m"
+    assert_close(h.result(), join_agg(q, as_db(cols)), 1e-12)
+
+
+@pytest.mark.parametrize(
+    "agg", [Sum("R2", "m"), Avg("R2", "m"), Min("R2", "m"), Max("R2", "m")]
+)
+def test_measured_aggregates(agg):
+    cols = star_cols(measure=True)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")), agg)
+    h = MaintainedJoinAgg(q, as_db(cols))
+    assert_close(h.result(), join_agg(q, as_db(cols)), 1e-12)
+    extra = {
+        "j": np.array([0, 1, 2]), "b": np.array([2, 3, 0]),
+        "m": np.array([5.0, 90.0, 1.0]),
+    }
+    h.insert("R2", extra)
+    assert_close(
+        h.result(), join_agg(q, as_db(with_extra(cols, "R2", extra))), 1e-12
+    )
+    # delete original tuples: exercises the MIN/MAX non-invertible fallback
+    d = {a: cols["R2"][a][:7] for a in ("j", "b", "m")}
+    h.delete("R2", extra)
+    h.delete("R2", d)
+    assert_close(
+        h.result(), join_agg(q, as_db(without_prefix(cols, "R2", 7))), 1e-12
+    )
+    if agg.kind in ("min", "max"):
+        assert h.stats.fallback_recomputes > 0
+
+
+def test_fold_mode_fallback():
+    """A delta on a relation consumed by the fold rewrite re-derives the
+    fold from maintained encodings instead of delta-patching."""
+    n = 150
+    cols = {
+        "R1": {"g1": RNG.integers(0, 5, n), "p": RNG.integers(0, 6, n)},
+        "R2": {"p": RNG.integers(0, 6, n), "g2": RNG.integers(0, 5, n)},
+        "R3": {"p": RNG.integers(0, 6, n // 3)},
+    }
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R2", "g2")))
+    h = MaintainedJoinAgg(q, as_db(cols))
+    assert h.fold_mode and "R3" in h.prep.fold_hosts
+    extra = {"p": np.array([0, 0, 3])}
+    h.insert("R3", extra)
+    assert_close(h.result(), join_agg(q, as_db(with_extra(cols, "R3", extra))))
+    assert h.stats.fallback_recomputes == 1
+    # a delta on a fold-UNaffected relation must propagate, not refold
+    mutated = with_extra(cols, "R3", extra)
+    for rel in ("R1", "R2"):
+        if rel in h._fold_affected:
+            continue
+        extra2 = (
+            {"g1": np.array([2]), "p": np.array([1])} if rel == "R1"
+            else {"p": np.array([1]), "g2": np.array([0])}
+        )
+        h.insert(rel, extra2)
+        mutated = with_extra(mutated, rel, extra2)
+        assert_close(h.result(), join_agg(q, as_db(mutated)))
+        assert h.stats.fallback_recomputes == 1  # unchanged: no refold
+
+
+def test_cyclic_dirty_bag_invalidation():
+    m = 250
+    cols = {
+        "E1": {"x": RNG.integers(0, 15, m), "y": RNG.integers(0, 15, m)},
+        "E2": {"y": RNG.integers(0, 15, m), "z": RNG.integers(0, 15, m)},
+        "E3": {"z": RNG.integers(0, 15, m), "x": RNG.integers(0, 15, m),
+               "g": RNG.integers(0, 6, m)},
+    }
+    q = JoinAggQuery(("E1", "E2", "E3"), (("E3", "g"),))
+    h = MaintainedJoinAgg(q, as_db(cols))
+    assert h.cyclic
+    assert_close(h.result(), join_agg(q, as_db(cols)))
+    extra = {"x": np.array([3, 5]), "y": np.array([7, 2])}
+    h.insert("E1", extra)
+    assert_close(h.result(), join_agg(q, as_db(with_extra(cols, "E1", extra))))
+    assert h.stats.dirty_bags > 0 and h.stats.clean_bags_reused > 0
+    h.delete("E1", extra)
+    assert_close(h.result(), join_agg(q, as_db(cols)))
+
+
+def test_maintain_factory_and_stats():
+    cols = star_cols()
+    h = maintain(COUNT_Q, as_db(cols))
+    assert isinstance(h, MaintainedJoinAgg)
+    h.insert("R2", {"j": np.array([0]), "b": np.array([0])})
+    s = h.stats
+    assert s.refreshes == 1 and s.delta_rows >= 1
+    assert s.peak_delta_bytes > 0  # maintenance memory is accounted
+
+
+def test_empty_batch_is_a_noop():
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols))
+    before = h.result()
+    for rel in ("R1", "R2", "R3"):
+        cur = {a: np.array([], dtype=np.int64) for a in cols[rel]}
+        h.insert(rel, cur)
+        h.delete(rel, cur)
+    assert h.result() == before
+    assert h.stats.delta_rows == 0
+
+
+def test_rejected_delete_does_not_grow_domains():
+    """A delete of absent tuples with never-seen values must not grow the
+    shared dictionaries (rejected operations leave NO state behind)."""
+    cols = star_cols()
+    h = MaintainedJoinAgg(COUNT_Q, as_db(cols))
+    sizes = {a: d.size for a, d in h.dicts.items()}
+    with pytest.raises(ValueError):
+        h.delete("R2", {"j": np.array([12345]), "b": np.array([54321])})
+    assert {a: d.size for a, d in h.dicts.items()} == sizes
+
+
+def test_refresh_work_is_delta_proportional():
+    """Structural acceptance check (wall-clock speedup is measured by
+    benchmark table 8, which is less flaky than a CI timing assert): a
+    small delta must rescan a tiny fraction of the data and produce a
+    bit-identical result."""
+    from repro.data import synth
+
+    n = 8000
+    db, q = synth.make("B2", n)
+    h = MaintainedJoinAgg(q, db)
+    delta = {"j": RNG.integers(0, 100, 50), "b": RNG.integers(0, 100, 50)}
+    h.insert("R2", delta)
+    db.relations["R2"].columns["j"] = np.concatenate(
+        [db["R2"].columns["j"], delta["j"]]
+    )
+    db.relations["R2"].columns["b"] = np.concatenate(
+        [db["R2"].columns["b"], delta["b"]]
+    )
+    assert h.result() == join_agg(q, db)  # bit-identical
+    # dirty-path rescans stay delta-proportional: far below one full pass
+    # over the 4 x n input rows
+    assert h.stats.rows_rescanned < n // 4, h.stats.rows_rescanned
+
+
+@pytest.mark.slow
+def test_refresh_much_faster_than_recompute():
+    """Wall-clock acceptance: ≤1% delta refresh ≥5× faster than a full
+    recompute (the benchmark shows ≥10×; the looser bound absorbs shared
+    -runner noise).  Slow-marked: timing asserts don't gate every push."""
+    import time
+
+    from repro.data import synth
+
+    db, q = synth.make("B2", 20000)
+    h = MaintainedJoinAgg(q, db)
+    delta = {
+        "j": RNG.integers(0, 2000, 100), "b": RNG.integers(0, 2000, 100),
+    }
+    t0 = time.perf_counter()
+    h.insert("R2", delta)
+    t_refresh = time.perf_counter() - t0
+    db.relations["R2"].columns["j"] = np.concatenate(
+        [db["R2"].columns["j"], delta["j"]]
+    )
+    db.relations["R2"].columns["b"] = np.concatenate(
+        [db["R2"].columns["b"], delta["b"]]
+    )
+    t0 = time.perf_counter()
+    full = join_agg(q, db)
+    t_full = time.perf_counter() - t0
+    assert h.result() == full  # bit-identical
+    assert t_full > 5 * t_refresh, (t_full, t_refresh)

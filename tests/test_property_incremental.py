@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis): any interleaving of insert/delete
+batches on a maintained handle must equal a from-scratch ``join_agg``
+over the mutated database — on all three engines, for COUNT/SUM and the
+MIN/MAX non-invertible fallback path (DESIGN.md §4)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # randomized sweeps; run via `-m slow`
+
+from repro.aggregates.semiring import Count, Max, Min, Sum
+from repro.core.operator import join_agg
+from repro.core.query import JoinAggQuery
+from repro.incremental import MaintainedJoinAgg
+from repro.relational.relation import Database
+
+GDOM, JDOM, BDOM = 4, 5, 4
+
+
+def _db_of(cols):
+    return Database.from_mapping({r: dict(c) for r, c in cols.items()})
+
+
+def _chain_cols(rng, n):
+    return {
+        "R1": {"g1": rng.integers(0, GDOM, n), "j": rng.integers(0, JDOM, n)},
+        "R2": {"j": rng.integers(0, JDOM, n), "b": rng.integers(0, BDOM, n),
+               "m": rng.integers(1, 20, n).astype(np.float64)},
+        "R3": {"b": rng.integers(0, BDOM, n), "g2": rng.integers(0, GDOM, n)},
+    }
+
+
+def _batch(rng, rel, cols, k, measured):
+    """A batch of k tuples for ``rel``: a mix of fresh random tuples and
+    copies of current tuples (so deletes have something to hit)."""
+    cur = cols[rel]
+    n = len(next(iter(cur.values())))
+    out = {}
+    reuse = rng.random(k) < 0.5 if n else np.zeros(k, dtype=bool)
+    pick = rng.integers(0, max(n, 1), k)
+    for a, c in cur.items():
+        hi = {"g1": GDOM, "g2": GDOM, "j": JDOM, "b": BDOM}.get(a, 20)
+        fresh = (
+            rng.integers(1, hi, k).astype(c.dtype)
+            if a != "m" else rng.integers(1, 20, k).astype(np.float64)
+        )
+        out[a] = np.where(reuse, c[pick] if n else fresh, fresh)
+    return out
+
+
+@st.composite
+def interleaving(draw):
+    seed = draw(st.integers(0, 2**31))
+    n = draw(st.integers(10, 60))
+    steps = draw(st.integers(1, 5))
+    rng = np.random.default_rng(seed)
+    cols = _chain_cols(rng, n)
+    ops = []
+    for _ in range(steps):
+        rel = draw(st.sampled_from(["R1", "R2", "R3"]))
+        k = draw(st.integers(1, 6))
+        insert = draw(st.booleans())
+        ops.append((rel, k, insert))
+    return seed, cols, ops
+
+
+def _apply_scratch(cols, rel, batch, insert):
+    out = {r: {a: c.copy() for a, c in cs.items()} for r, cs in cols.items()}
+    if insert:
+        for a in out[rel]:
+            out[rel][a] = np.concatenate([out[rel][a], batch[a]])
+        return out
+    # multiset delete: remove one occurrence per batch row, if present
+    attrs = list(out[rel])
+    from collections import Counter
+
+    cur = Counter(
+        tuple(out[rel][a][i].item() for a in attrs)
+        for i in range(len(out[rel][attrs[0]]))
+    )
+    want = Counter(
+        tuple(np.asarray(batch[a])[i].item() for a in attrs)
+        for i in range(len(np.asarray(batch[attrs[0]])))
+    )
+    removable = Counter({k: min(v, cur[k]) for k, v in want.items()})
+    keep = np.ones(len(out[rel][attrs[0]]), dtype=bool)
+    for i in range(len(keep)):
+        row = tuple(out[rel][a][i].item() for a in attrs)
+        if removable.get(row, 0) > 0:
+            removable[row] -= 1
+            keep[i] = False
+    for a in attrs:
+        out[rel][a] = out[rel][a][keep]
+    return out, want - Counter({k: min(v, cur[k]) for k, v in want.items()})
+
+
+def _deletable(cols, rel, batch):
+    """Restrict the batch to rows currently present (so deletes are legal)."""
+    from collections import Counter
+
+    attrs = list(cols[rel])
+    cur = Counter(
+        tuple(cols[rel][a][i].item() for a in attrs)
+        for i in range(len(cols[rel][attrs[0]]))
+    )
+    keep = []
+    for i in range(len(np.asarray(batch[attrs[0]]))):
+        row = tuple(np.asarray(batch[a])[i].item() for a in attrs)
+        if cur.get(row, 0) > 0:
+            cur[row] -= 1
+            keep.append(i)
+    if not keep:
+        return None
+    return {a: np.asarray(batch[a])[keep] for a in attrs}
+
+
+def _check(engine, agg, seed, cols, ops, tol):
+    rng = np.random.default_rng(seed + 1)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")), agg)
+    h = MaintainedJoinAgg(q, _db_of(cols), engine=engine)
+    for rel, k, insert in ops:
+        batch = _batch(rng, rel, cols, k, measured=agg.measure is not None)
+        if not insert:
+            batch = _deletable(cols, rel, batch)
+            if batch is None:
+                continue
+        if insert:
+            h.insert(rel, batch)
+            cols = _apply_scratch(cols, rel, batch, True)
+        else:
+            h.delete(rel, batch)
+            cols, leftover = _apply_scratch(cols, rel, batch, False)
+            assert not +leftover
+        want = join_agg(q, _db_of(cols))
+        got = h.result()
+        assert set(got) == set(want), (engine, agg.kind, len(got), len(want))
+        for key, v in want.items():
+            assert abs(got[key] - v) <= tol * max(1.0, abs(v)), (
+                engine, agg.kind, key, got[key], v,
+            )
+
+
+@settings(max_examples=25, deadline=None)
+@given(interleaving())
+def test_interleavings_count_all_engines(case):
+    seed, cols, ops = case
+    for engine, tol in [("tensor", 0.0), ("ref", 0.0), ("jax", 1e-4)]:
+        _check(engine, Count(), seed, cols, ops, tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(interleaving())
+def test_interleavings_sum(case):
+    seed, cols, ops = case
+    # integer-valued measures keep float64 sums exact -> bitwise compare
+    _check("tensor", Sum("R2", "m"), seed, cols, ops, 0.0)
+    _check("jax", Sum("R2", "m"), seed, cols, ops, 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(interleaving())
+def test_interleavings_minmax_fallback(case):
+    seed, cols, ops = case
+    _check("tensor", Min("R2", "m"), seed, cols, ops, 0.0)
+    _check("tensor", Max("R2", "m"), seed, cols, ops, 0.0)
