@@ -14,6 +14,10 @@ Table VIII — incremental maintenance (DESIGN.md §4): refresh latency of
             a MaintainedJoinAgg delta vs full join_agg recompute vs the
             binary-join baseline, across delta sizes 1→10⁴ on the B2
             star query, with peak-delta-bytes accounting.
+Table IX  — multi-aggregate bundles (DESIGN.md §6): one fused
+            multi-channel pass (COUNT+SUM+MIN+AVG via the logical-plan
+            API) vs N separate single-aggregate join_agg runs, time and
+            peak allocation, acyclic chain and cyclic triangle.
 
 The 'PostgreSQL' column of the paper maps to the in-process traditional
 binary-join baseline; all engines are validated to agree on each run.
@@ -161,6 +165,100 @@ def table8_incremental(n: int, verify: bool) -> None:
     )
     if verify:
         check_agree(handle.result(), res_b, "table8:binary")
+
+
+def table9_multiagg(n: int, verify: bool) -> None:
+    """One fused multi-aggregate pass vs N independent single-agg runs.
+
+    The bundle (COUNT, SUM, MIN, AVG over one measure) runs as two
+    semiring channels + one reachability pass through the logical-plan
+    API; the baseline runs the same aggregates as four separate
+    ``join_agg`` calls.  Time and tracemalloc peak are reported for both,
+    on an acyclic chain and (at reduced scale) a cyclic triangle."""
+    import numpy as np
+
+    from repro.aggregates.semiring import Avg, Count, Min, Sum
+    from repro.api import Q
+    from repro.core.query import JoinAggQuery
+    from repro.data.queries import triangle_like
+
+    rng = np.random.default_rng(17)
+    jdom, gdom = max(2, n // 20), max(2, n // 50)
+    db = _measured_chain_db(rng, n, jdom, gdom)
+    cases = {
+        "CHAIN": (
+            db,
+            ("R1", "R2", "R3"),
+            (("R1", "g1"), ("R3", "g2")),
+            {
+                "count": Count(),
+                "total": Sum("R2.m"),
+                "lo": Min("R2.m"),
+                "mean": Avg("R2.m"),
+            },
+        )
+    }
+    tri_db, tri_q = triangle_like(max(200, n // 4))
+    tri_db["E1"].columns["w"] = rng.integers(1, 9, tri_db["E1"].num_rows)
+    cases["TRIANGLE"] = (
+        tri_db,
+        tri_q.relations,
+        tri_q.group_by,
+        {
+            "count": Count(),
+            "total": Sum("E1.w"),
+            "lo": Min("E1.w"),
+            "mean": Avg("E1.w"),
+        },
+    )
+
+    for tag, (cdb, rels, group_by, aggs) in cases.items():
+        q = Q.over(*rels).group_by(*group_by).agg(**aggs)
+        plan = q.plan(cdb)
+        (res, mem_multi), t_multi = timed(peak_memory, plan.execute)
+        emit(
+            f"table9,{tag},multiagg_pass", t_multi,
+            f"aggs={len(aggs)};groups={res.num_rows};"
+            f"peak_mb={mem_multi / 1e6:.2f}",
+        )
+
+        def run_separate(cdb=cdb, rels=rels, group_by=group_by, aggs=aggs):
+            return {
+                name: join_agg(JoinAggQuery(rels, group_by, agg), cdb)
+                for name, agg in aggs.items()
+            }
+
+        (sep, mem_sep), t_sep = timed(peak_memory, run_separate)
+        emit(
+            f"table9,{tag},separate_runs", t_sep,
+            f"aggs={len(aggs)};speedup_of_fused={t_sep / t_multi:.2f}x;"
+            f"peak_mb={mem_sep / 1e6:.2f}",
+        )
+        if verify:
+            for name in aggs:
+                check_agree(res.to_dict(name), sep[name], f"table9,{tag}:{name}")
+
+
+def _measured_chain_db(rng, n, jdom, gdom):
+    from repro.relational.relation import Database
+
+    return Database.from_mapping(
+        {
+            "R1": {
+                "g1": rng.integers(0, gdom, n),
+                "p0": rng.integers(0, jdom, n),
+            },
+            "R2": {
+                "p0": rng.integers(0, jdom, n),
+                "p1": rng.integers(0, jdom, n),
+                "m": rng.integers(1, 100, n),
+            },
+            "R3": {
+                "p1": rng.integers(0, jdom, n),
+                "g2": rng.integers(0, gdom, n),
+            },
+        }
+    )
 
 
 def table7_cyclic(n: int, verify: bool) -> None:

@@ -12,7 +12,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import numpy as np  # noqa: E402
 
 from repro.core import distributed  # noqa: E402
 from repro.core.prepare import prepare  # noqa: E402

@@ -17,8 +17,6 @@ the unchanged acyclic message-passing runs over the bag tree.
 """
 import time
 
-import numpy as np
-
 from repro.baselines.binary_join import binary_join_agg
 from repro.core.operator import join_agg, peak_message_bytes
 from repro.data.queries import imdb_like, triangle_like

@@ -1,7 +1,8 @@
-"""Market-basket co-occurrence (the paper's ORDS workload): which item
-pairs are bought together, computed as a self-join aggregate with the
-memory-bounded streaming mode (the per-source iteration of Section IV
-as group-axis tiles).
+"""Market-basket co-occurrence (the paper's ORDS workload) on the
+logical-plan API: which item pairs are bought together, written as a
+*self-join* of one line-items table — the planner does the aliasing and
+column renames that used to be manual — with a pushed-down ``where``
+filter and the memory-bounded streaming mode.
 
     PYTHONPATH=src python examples/market_basket.py
 """
@@ -9,30 +10,60 @@ import time
 
 import numpy as np
 
-from repro.core.operator import join_agg
-from repro.core.tensor_engine import execute_tensor
-from repro.core.prepare import prepare
-from repro.data.queries import ords_like
+from repro.api import Count, Q
+from repro.relational.relation import Database
 
-db, query = ords_like(n=80_000, seed=2)
+rng = np.random.default_rng(2)
+n, n_item, n_inv = 80_000, 1600, 10_000
+items = (rng.zipf(1.2, size=n) - 1) % n_item
+db = Database.from_mapping(
+    {
+        "LineItems": {
+            "item": items,
+            "invoice": rng.integers(0, n_inv, n),
+        }
+    }
+)
 
+pairs_q = (
+    Q.over(("I1", "LineItems"), ("I2", "LineItems"))  # self-join aliases
+    .rename("I1", item="i1")
+    .rename("I2", item="i2")
+    .group_by("I1.i1", "I2.i2")
+    .agg(together=Count())
+)
+
+plan = pairs_q.plan(db)
+print(plan.explain())
 t0 = time.perf_counter()
-full = join_agg(query, db)
+full = plan.execute()
 t_full = time.perf_counter() - t0
 
 # streaming: tile the i1 group axis so peak message memory stays bounded
-prep = prepare(query, db)
-dom = prep.dicts["i1"].size
 t0 = time.perf_counter()
-streamed = execute_tensor(query, db, stream=("i1", max(1, dom // 8)))
+streamed = pairs_q.stream("i1", max(1, n_item // 8)).plan(db).execute()
 t_stream = time.perf_counter() - t0
+assert streamed.to_dict() == full.to_dict()
 
-assert streamed == full
-pairs = sorted(full.items(), key=lambda kv: -kv[1])
-print(f"{db['I1'].num_rows:,} line items, {dom} distinct items, "
-      f"{len(full):,} co-occurring pairs")
+# pushed-down selection: only invoices from the "first day" slice
+filtered = (
+    pairs_q.where("I1", "invoice", "<", n_inv // 10)
+    .where("I2", "invoice", "<", n_inv // 10)
+    .plan(db)
+    .execute()
+)
+
+print(
+    f"\n{db['LineItems'].num_rows:,} line items, {n_item} distinct items, "
+    f"{full.num_rows:,} co-occurring pairs "
+    f"({filtered.num_rows:,} in the first-day slice)"
+)
 print(f"one-shot:  {t_full:.3f}s   streamed (8 tiles): {t_stream:.3f}s")
 print("top pairs bought together:")
-for (a, b), c in pairs[:5]:
-    if a != b:
-        print(f"  item {a:5d} + item {b:5d}: {int(c)} times")
+top = np.argsort(-full.column("together"))[:8]
+shown = 0
+for i in top:
+    a, b = full.column("i1")[i], full.column("i2")[i]
+    if a != b and shown < 5:
+        shown += 1
+        print(f"  item {a:5d} + item {b:5d}: {int(full.column('together')[i])} times")

@@ -1,15 +1,16 @@
-"""Quickstart: the JOIN-AGG operator on a branching join-aggregate.
+"""Quickstart: the logical-plan API on a branching join-aggregate.
 
 Runs the paper's running-example query shape ([Q3], Listing 3):
 
-    SELECT A.a, B.b, C.c, COUNT(*)
+    SELECT A.a, B.b, C.c, COUNT(*), SUM(J.m), AVG(J.m)
     FROM R1 A, R2 J, R3 B, R4 C
     WHERE A.j1=J.j1 AND J.j2=B.j2 AND J.j3=C.j3
     GROUP BY A.a, B.b, C.c
 
-through all three engines (paper-faithful data-graph DFS, TPU-native
-tensor contraction, JAX einsum) and checks them against the brute-force
-materialized join.
+as ONE plan with three named aggregates in a single contraction pass,
+through all three registered engines (TPU-native tensor contraction, JAX
+einsum, paper-faithful data-graph DFS), and checks the columnar result
+against the brute-force materialized join.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,11 +18,8 @@ import time
 
 import numpy as np
 
-from repro.core.jax_engine import execute_jax
-from repro.core.operator import join_agg
-from repro.core.query import JoinAggQuery
-from repro.core.ref_engine import execute_ref
-from repro.relational.oracle import oracle_joinagg
+from repro.api import Avg, Count, Q, Sum
+from repro.relational.oracle import oracle_multiagg
 from repro.relational.relation import Database
 
 rng = np.random.default_rng(0)
@@ -34,38 +32,55 @@ db = Database.from_mapping(
             "j1": rng.integers(0, jdom, n),
             "j2": rng.integers(0, jdom, n),
             "j3": rng.integers(0, jdom, n),
+            "m": rng.integers(1, 50, n),
         },
         "R3": {"j2": rng.integers(0, jdom, n), "b": rng.integers(0, gdom, n)},
         "R4": {"j3": rng.integers(0, jdom, n), "c": rng.integers(0, gdom, n)},
     }
 )
-query = JoinAggQuery(
-    ("R1", "R2", "R3", "R4"),
-    (("R1", "a"), ("R3", "b"), ("R4", "c")),
+
+query = (
+    Q.over("R1", "R2", "R3", "R4")
+    .group_by("R1.a", "R3.b", "R4.c")
+    .agg(count=Count(), total=Sum("R2.m"), mean=Avg("R2.m"))
 )
 
-t0 = time.perf_counter()
-result = join_agg(query, db)  # cost-based root + engine choice
-t1 = time.perf_counter()
-print(f"JOIN-AGG (tensor engine):  {len(result):7d} groups in {t1 - t0:.3f}s")
+results = {}
+for engine in ("tensor", "jax", "ref"):
+    plan = query.engine(engine).plan(db)
+    t0 = time.perf_counter()
+    results[engine] = plan.execute()
+    t1 = time.perf_counter()
+    print(
+        f"JOIN-AGG ({engine:6s}): {results[engine].num_rows:7d} groups × "
+        f"{len(results[engine].agg_names)} aggregates in {t1 - t0:.3f}s"
+    )
+
+print()
+print(query.plan(db).explain())
+print()
 
 t0 = time.perf_counter()
-ref = execute_ref(query, db)
+want = oracle_multiagg(
+    ("R1", "R2", "R3", "R4"),
+    (("R1", "a"), ("R3", "b"), ("R4", "c")),
+    dict(count=Count(), total=Sum("R2.m"), mean=Avg("R2.m")),
+    db,
+)
 t1 = time.perf_counter()
-print(f"JOIN-AGG (paper-faithful): {len(ref):7d} groups in {t1 - t0:.3f}s")
+join_size = sum(v["count"] for v in want.values())
+print(
+    f"materialized join oracle:  {len(want):7d} groups in {t1 - t0:.3f}s "
+    f"(join result: {join_size:.0f} tuples — never materialized above)"
+)
 
-t0 = time.perf_counter()
-jx = execute_jax(query, db)
-t1 = time.perf_counter()
-print(f"JOIN-AGG (jax einsum):     {len(jx):7d} groups in {t1 - t0:.3f}s")
-
-t0 = time.perf_counter()
-want = oracle_joinagg(query, db)
-t1 = time.perf_counter()
-join_size = sum(want.values())
-print(f"materialized join oracle:  {len(want):7d} groups in {t1 - t0:.3f}s "
-      f"(join result: {join_size:.0f} tuples — never materialized above)")
-
-for got, name in ((result, "tensor"), (ref, "ref"), (jx, "jax")):
-    assert got == {k: v for k, v in want.items()}, f"{name} engine mismatch"
-print("all engines agree ✓")
+for engine, res in results.items():
+    got = {
+        key: {name: float(res.column(name)[i]) for name in res.agg_names}
+        for i, key in enumerate(res.group_tuples())
+    }
+    assert set(got) == set(want), f"{engine}: group sets differ"
+    for key, vals in want.items():
+        for name, v in vals.items():
+            assert got[key][name] == v, (engine, key, name)
+print("all engines agree with the oracle on every aggregate ✓")

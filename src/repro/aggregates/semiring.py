@@ -25,6 +25,12 @@ class AggSpec:
     def measure(self) -> tuple[str, str] | None:
         return None
 
+    def describe(self) -> str:
+        """Human-readable form used by ``Plan.explain()``."""
+        m = self.measure
+        inner = f"{m[0]}.{m[1]}" if m else "*"
+        return f"{self.kind.upper()}({inner})"
+
 
 @dataclass(frozen=True)
 class Count(AggSpec):
@@ -33,8 +39,25 @@ class Count(AggSpec):
 
 @dataclass(frozen=True)
 class _Measured(AggSpec):
+    """Measured aggregate over ``relation.attr``.
+
+    Accepts either ``Sum("R", "m")`` or the dotted shorthand ``Sum("R.m")``
+    (the logical-plan builder's preferred spelling).
+    """
+
     relation: str
-    attr: str
+    attr: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.attr:
+            if "." not in self.relation:
+                raise ValueError(
+                    f"{type(self).__name__}: pass (relation, attr) or 'R.attr', "
+                    f"got {self.relation!r}"
+                )
+            rel, attr = self.relation.split(".", 1)
+            object.__setattr__(self, "relation", rel)
+            object.__setattr__(self, "attr", attr)
 
     @property
     def measure(self) -> tuple[str, str]:

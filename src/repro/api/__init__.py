@@ -1,0 +1,51 @@
+"""The logical-plan front end — the one public entry point (DESIGN.md §6).
+
+    from repro.api import Q, Count, Sum, Min, Avg
+
+    res = (
+        Q.over("R", "S", "T")
+        .where("S", "m", ">", 0.0)
+        .group_by("R.a", "T.b")
+        .agg(count=Count(), total=Sum("S.m"), lo=Min("S.m"))
+        .plan(db)
+        .execute()
+    )
+
+The legacy free functions (``repro.core.operator.join_agg`` /
+``estimate_plan`` / ``choose_root`` / ``maintain``) remain as thin shims
+over this planner.
+"""
+from repro.aggregates.semiring import AggSpec, Avg, Count, Max, Min, Sum
+from repro.api.builder import Q
+from repro.api.engines import (
+    Channel,
+    Engine,
+    EngineOutput,
+    MinMaxRequest,
+    register_engine,
+    resolve_engine,
+)
+from repro.api.maintain import MaintainedPlan
+from repro.api.plan import AggResult, Plan, compile_plan
+from repro.core.operator import UnsupportedPlanOption
+
+__all__ = [
+    "AggResult",
+    "AggSpec",
+    "Avg",
+    "Channel",
+    "Count",
+    "Engine",
+    "EngineOutput",
+    "MaintainedPlan",
+    "Max",
+    "Min",
+    "MinMaxRequest",
+    "Plan",
+    "Q",
+    "Sum",
+    "UnsupportedPlanOption",
+    "compile_plan",
+    "register_engine",
+    "resolve_engine",
+]

@@ -1,0 +1,611 @@
+"""The logical plan: one planner, one :class:`Plan` (DESIGN.md §6).
+
+``Q.over(...)...plan(db)`` compiles a declarative query spec into a
+single :class:`Plan` object through the stages the caller used to wire by
+hand:
+
+1. **Logical rewrites** — self-join aliasing (duplicate relation names
+   become distinct aliased copies), per-relation selection pushdown
+   (``where`` predicates filter *before* ``prepare``, so dictionaries
+   encode only surviving tuples), and automatic column-copy for group
+   attributes that participate in joins (the paper's Section II-A
+   convention, previously manual for acyclic queries).
+2. **Physical choice** — cyclic queries route through the GHD compiler,
+   acyclic ones through a cost-based root search over the fold/decompose
+   pipeline (per-root failures are collected, not swallowed).
+3. **Channelization** — the named-aggregate bundle becomes one COUNT
+   channel, one SUM channel per distinct measure (AVG = SUM/COUNT pair,
+   derived at decode), and MIN/MAX reachability requests; all
+   distributive channels run in a *single* contraction pass.
+
+``Plan.execute()`` returns a columnar :class:`AggResult`;
+``Plan.explain()`` renders the decisions; ``Plan.maintain()`` hands the
+same query to the incremental maintainer.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.aggregates.semiring import AggSpec
+from repro.api.engines import (
+    COUNT_CHANNEL,
+    Channel,
+    Engine,
+    EngineOutput,
+    MinMaxRequest,
+)
+from repro.core.operator import (
+    DEFAULT_MEMORY_BUDGET,
+    UnsupportedPlanOption,
+    node_message_bytes,
+    peak_message_bytes,
+)
+from repro.core.prepare import Prepared, encode_query, finish_prepare
+from repro.core.query import JoinAggQuery, resolve_schema
+from repro.relational.relation import Database, Relation
+
+COPY_SUFFIX = "__grp"
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """A pushed-down per-relation selection: ``fn(columns) -> bool mask``."""
+
+    relation: str
+    label: str
+    fn: Callable[[dict[str, np.ndarray]], np.ndarray]
+
+
+@dataclass
+class AggResult:
+    """Columnar result: one column per group attribute (display names in
+    query order) plus one column per named aggregate."""
+
+    group_names: tuple[str, ...]
+    agg_names: tuple[str, ...]
+    agg_kinds: dict[str, str]
+    relation: Relation
+
+    @property
+    def num_rows(self) -> int:
+        return self.relation.num_rows
+
+    def column(self, name: str) -> np.ndarray:
+        return self.relation.columns[name]
+
+    def group_tuples(self) -> list[tuple]:
+        cols = [self.relation.columns[g] for g in self.group_names]
+        return [tuple(c[i] for c in cols) for i in range(self.num_rows)]
+
+    def to_dict(self, agg: str | None = None) -> dict[tuple, float]:
+        """Back-compat ``{group values: value}`` dict for one aggregate.
+
+        Matches the legacy ``join_agg`` exactly: COUNT/SUM/AVG drop
+        exact-zero values (the old dense-decode nonzero semantics);
+        MIN/MAX keep every joined group, zeros included.
+        """
+        if agg is None:
+            if len(self.agg_names) != 1:
+                raise ValueError(f"result has aggregates {self.agg_names}; name one")
+            agg = self.agg_names[0]
+        vals = self.relation.columns[agg]
+        keep_zero = self.agg_kinds[agg] in ("min", "max")
+        out: dict[tuple, float] = {}
+        for key, v in zip(self.group_tuples(), vals):
+            v = float(v)
+            if v == 0.0 and not keep_zero:
+                continue
+            out[key] = v
+        return out
+
+    def __repr__(self) -> str:
+        return (
+            f"AggResult({self.num_rows} groups × "
+            f"{list(self.group_names)} | {list(self.agg_names)})"
+        )
+
+
+@dataclass
+class Plan:
+    """A compiled logical plan, ready to execute, explain, or maintain."""
+
+    spec: "object"  # the Q builder that produced this plan
+    db: Database  # effective database (aliases + predicates + copies)
+    query: JoinAggQuery  # rewritten query (primary aggregate)
+    aggs: tuple[tuple[str, AggSpec], ...]
+    group_display: tuple[str, ...]
+    engine: Engine
+    prep: Prepared | None  # None only for maintenance-only compiles
+    channels: tuple[Channel, ...]
+    minmax: tuple[MinMaxRequest, ...]
+    assemble: dict[str, tuple]  # agg name -> assembly recipe
+    cyclic: bool
+    ghd_plan: "object | None"
+    rewrite_notes: tuple[str, ...]
+    memory_budget: int | None
+    stream: tuple[str, int] | None
+    root_notes: tuple[str, ...] = ()
+
+    # ------------------------------------------------------------------
+    def _require_physical(self) -> None:
+        if self.prep is None:
+            raise RuntimeError(
+                "this Plan was compiled for maintenance only (physical stage "
+                "skipped); use Q.plan(db) for execute()/explain()"
+            )
+
+    @property
+    def message_peak(self) -> int:
+        self._require_physical()
+        return peak_message_bytes(self.prep)
+
+    @property
+    def est_peak(self) -> int:
+        if self.ghd_plan is not None:
+            return max(self.ghd_plan.bag_peak_bytes, self.message_peak)
+        return self.message_peak
+
+    def _resolved_stream(self) -> tuple[str, int] | None:
+        """The tile plan actually used: the explicit ``stream`` option, or
+        the legacy auto-streaming fallback when the estimated peak
+        exceeds the (tensor-only) memory budget."""
+        if self.stream is not None:
+            return self.stream
+        if not self.engine.supports_streaming:
+            return None
+        budget = (
+            self.memory_budget
+            if self.memory_budget is not None
+            else DEFAULT_MEMORY_BUDGET
+        )
+        peak = self.message_peak
+        if peak <= budget:
+            return None
+        prep = self.prep
+        attr = max((a for _, a in prep.group_attrs), key=lambda a: prep.dicts[a].size)
+        dom = prep.dicts[attr].size
+        shrink = int(math.ceil(peak / budget))
+        tile = max(1, dom // shrink)
+        return (attr, tile)
+
+    # ------------------------------------------------------------------
+    def execute(self) -> AggResult:
+        """Run every named aggregate in a single contraction pass."""
+        self._require_physical()
+        outputs = self.engine.run(
+            self.prep, self.channels, self.minmax, self._resolved_stream()
+        )
+        return _assemble(self, outputs)
+
+    def maintain(self):
+        """Incremental-maintenance handle(s) for this plan's query.
+
+        Single-aggregate plans return a raw
+        :class:`~repro.incremental.maintained.MaintainedJoinAgg` when no
+        logical rewrite is in play; otherwise a
+        :class:`~repro.api.maintain.MaintainedPlan` wrapper applies the
+        plan's alias/predicate/copy rewrites to every delta batch and
+        fans deltas out to one maintained handle per named aggregate.
+        """
+        from repro.api.maintain import MaintainedPlan, raw_handle
+
+        if self.stream is not None or self.memory_budget is not None:
+            raise UnsupportedPlanOption(
+                "maintain() does not support stream/memory_budget options"
+            )
+        if len(self.aggs) == 1 and not self._needs_delta_rewrite():
+            return raw_handle(self)
+        return MaintainedPlan(self)
+
+    def _needs_delta_rewrite(self) -> bool:
+        spec = self.spec
+        return bool(
+            spec.predicates
+            or any(n != s for n, s in spec.relations)
+            or any(m for _, m in spec.renames)
+            or self._group_copies()
+        )
+
+    def _group_copies(self) -> dict[str, tuple[str, str]]:
+        """relation -> (source attr, copy attr) for planner-made copies."""
+        out = {}
+        for (rel, attr), (_, attr0) in zip(
+            self.query.group_by, self.spec.group_attrs
+        ):
+            if attr != attr0:
+                out[rel] = (attr0, attr)
+        return out
+
+    # ------------------------------------------------------------------
+    def explain(self) -> str:
+        """Human-readable plan: strategy, root, rewrites, per-node peaks."""
+        self._require_physical()
+        prep = self.prep
+        lines = [
+            f"Plan: JOIN-AGG over {len(self.spec.relations)} relations "
+            f"-> {len(self.group_display)} group attrs "
+            f"(engine={self.engine.name})"
+        ]
+        if self.cyclic:
+            g = self.ghd_plan
+            lines.append(
+                f"strategy: GHD (cyclic) — {len(g.ghd.order)} bags, "
+                f"est bag peak {_fmt_bytes(g.bag_peak_bytes)}; derived "
+                f"acyclic tree root={prep.decomposition.root}, "
+                f"est peak message {_fmt_bytes(self.message_peak)}"
+            )
+        else:
+            lines.append(
+                f"strategy: acyclic contraction, "
+                f"root={prep.decomposition.root}, "
+                f"est peak message {_fmt_bytes(self.message_peak)}"
+            )
+        stream = self._resolved_stream()
+        if stream is not None:
+            lines.append(
+                f"stream: tile group attr {stream[0]!r} × {stream[1]} "
+                f"(memory budget "
+                f"{_fmt_bytes(self.memory_budget or DEFAULT_MEMORY_BUDGET)})"
+            )
+        lines.append(
+            f"aggregates ({len(self.channels)} semiring channel(s), "
+            f"{len(self.minmax)} min/max request(s), one pass):"
+        )
+        for name, agg in self.aggs:
+            lines.append(f"  {name} = {agg.describe()}")
+        if self.rewrite_notes:
+            lines.append("rewrites:")
+            for note in self.rewrite_notes:
+                lines.append(f"  {note}")
+        if self.root_notes:
+            lines.append("rejected roots:")
+            for note in self.root_notes:
+                lines.append(f"  {note}")
+        lines.append("tree:")
+        lines.extend("  " + t for t in _render_tree(prep))
+        if prep.folded:
+            folds = ", ".join(f"{f}->{prep.fold_hosts[f]}" for f in prep.folded)
+            lines.append(f"  folded: {folds}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        kind = "ghd" if self.cyclic else "acyclic"
+        return (
+            f"Plan({kind}, engine={self.engine.name}, "
+            f"root={self.prep.decomposition.root}, "
+            f"aggs={[n for n, _ in self.aggs]})"
+        )
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.0f} {unit}" if unit == "B" else f"{n:.1f} {unit}"
+        n /= 1024
+    raise AssertionError
+
+
+def _render_tree(prep: Prepared) -> list[str]:
+    sizes = node_message_bytes(prep)
+    deco = prep.decomposition
+    lines = [f"{deco.root} (root)  msg {_fmt_bytes(sizes[deco.root])}"]
+
+    def walk(rel: str, prefix: str) -> None:
+        kids = deco.nodes[rel].children
+        for i, c in enumerate(kids):
+            last = i == len(kids) - 1
+            glyph = "└─ " if last else "├─ "
+            lines.append(prefix + glyph + f"{c}  msg {_fmt_bytes(sizes[c])}")
+            walk(c, prefix + ("   " if last else "│  "))
+
+    walk(deco.root, "")
+    return lines
+
+
+# ----------------------------------------------------------------------
+# compilation
+# ----------------------------------------------------------------------
+
+
+def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
+    """Compile a builder spec against ``db`` into a :class:`Plan`.
+
+    ``physical=False`` runs every logical stage (rewrites, validation,
+    option checks) but skips root search / GHD compilation and
+    channelization — the maintenance path (``Q.maintain``), where the
+    incremental maintainer builds its own growable prepared state and a
+    full ``Prepared`` would be thrown away.
+    """
+    from repro.api.engines import resolve_engine
+    from repro.ghd.rewrite import compile_ghd, is_cyclic_query
+
+    if not spec.relations:
+        raise ValueError("query has no relations; start with Q.over(...)")
+    if not spec.group_attrs:
+        raise ValueError("query needs .group_by(...)")
+    aggs = spec.aggs
+    if not aggs:
+        from repro.aggregates.semiring import Count
+
+        aggs = (("count", Count()),)
+
+    notes: list[str] = []
+    edb = _apply_aliases(spec, db, notes)
+    edb = _apply_predicates(spec, edb, notes)
+
+    rel_names = tuple(n for n, _ in spec.relations)
+    group_by = list(spec.group_attrs)
+    for rel, attr in group_by:
+        if rel not in rel_names:
+            raise ValueError(f"group-by relation {rel!r} not in query")
+        if attr not in edb[rel].attrs:
+            raise ValueError(f"group attr {rel}.{attr} does not exist")
+
+    measures = _collect_measures(aggs, rel_names, edb)
+    names = [n for n, _ in aggs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate aggregate names: {names}")
+
+    primary = aggs[0][1]
+    query0 = JoinAggQuery(rel_names, tuple(group_by), primary)
+    cyclic = is_cyclic_query(query0, edb)
+
+    if not cyclic:
+        edb, group_by = _copy_joining_group_attrs(rel_names, edb, group_by, notes)
+        query0 = JoinAggQuery(rel_names, tuple(group_by), primary)
+
+    engine = resolve_engine(spec.engine_name)
+    if (spec.stream_opt is not None or spec.budget is not None) and (
+        not engine.supports_streaming
+    ):
+        raise UnsupportedPlanOption(
+            f"engine {engine.name!r} does not support the "
+            f"stream/memory_budget options (only streaming-capable "
+            f"engines do); drop the option or use engine='tensor'"
+        )
+
+    group_display = _display_names(spec.group_attrs)
+    clash = set(group_display) & set(names)
+    if clash:
+        raise ValueError(f"aggregate names collide with group columns: {sorted(clash)}")
+
+    ghd_plan = None
+    prep = None
+    root_notes: tuple[str, ...] = ()
+    channels: tuple[Channel, ...] = ()
+    minmax: tuple[MinMaxRequest, ...] = ()
+    assemble: dict[str, tuple] = {}
+    if physical:
+        if cyclic:
+            ghd_plan = compile_ghd(query0, edb, measures=measures)
+            prep = ghd_plan.prepared
+            bag_of = dict(ghd_plan.measure_bags)
+
+            def resolve_rel(rel: str) -> str:
+                rel = bag_of.get(rel, rel)
+                return prep.measure_moves.get(rel, rel)
+
+        else:
+            prep, root_notes = _best_root(query0, edb, measures)
+
+            def resolve_rel(rel: str) -> str:
+                return prep.measure_moves.get(rel, rel)
+
+        channels, minmax, assemble = _channelize(aggs, resolve_rel)
+
+    return Plan(
+        spec=spec,
+        db=edb,
+        query=query0,
+        aggs=aggs,
+        group_display=group_display,
+        engine=engine,
+        prep=prep,
+        channels=channels,
+        minmax=minmax,
+        assemble=assemble,
+        cyclic=cyclic,
+        ghd_plan=ghd_plan,
+        rewrite_notes=tuple(notes),
+        memory_budget=spec.budget,
+        stream=spec.stream_opt,
+        root_notes=root_notes,
+    )
+
+
+def _apply_aliases(spec, db: Database, notes: list[str]) -> Database:
+    renames = dict(spec.renames)
+    edb = Database()
+    for name, source in spec.relations:
+        if source not in db:
+            raise KeyError(f"relation {source!r} not in database")
+        mapping = dict(renames.get(name, ()))
+        if name == source and not mapping:
+            edb.add(db[source])
+            continue
+        edb.add(db[source].renamed(name, mapping))
+        if name != source:
+            note = f"alias {name} := {source}"
+            if mapping:
+                note += " (" + ", ".join(
+                    f"{a}->{b}" for a, b in mapping.items()
+                ) + ")"
+            notes.append(note)
+    return edb
+
+
+def _apply_predicates(spec, edb: Database, notes: list[str]) -> Database:
+    for pred in spec.predicates:
+        if pred.relation not in edb:
+            raise KeyError(f"where: relation {pred.relation!r} not in query")
+        rel = edb[pred.relation]
+        mask = np.asarray(pred.fn(rel.columns))
+        before = rel.num_rows
+        filtered = rel.filter(mask)
+        edb.add(filtered)
+        notes.append(
+            f"where {pred.relation}: {pred.label} "
+            f"({before} -> {filtered.num_rows} rows)"
+        )
+    return edb
+
+
+def _collect_measures(
+    aggs, rel_names: tuple[str, ...], edb: Database
+) -> dict[str, str]:
+    measures: dict[str, str] = {}
+    for name, agg in aggs:
+        m = agg.measure
+        if m is None:
+            continue
+        rel, attr = m
+        if rel not in rel_names:
+            raise ValueError(
+                f"aggregate {name!r} measures {rel}.{attr}, but {rel!r} "
+                "is not a query relation"
+            )
+        if attr not in edb[rel].attrs:
+            raise ValueError(
+                f"aggregate {name!r}: measure column {rel}.{attr} "
+                "does not exist"
+            )
+        if measures.setdefault(rel, attr) != attr:
+            raise UnsupportedPlanOption(
+                f"aggregates measure two different columns of {rel!r} "
+                f"({measures[rel]!r} and {attr!r}); payloads share one "
+                "key space per relation — alias a second copy of the "
+                "relation instead"
+            )
+    return measures
+
+
+def _copy_joining_group_attrs(rel_names, edb: Database, group_by, notes: list[str]):
+    """The paper's Section II-A column-copy convention, automated: a group
+    attribute that participates in a join is copied under a fresh name
+    inside its relation and the query groups by the copy."""
+    attr_count: dict[str, int] = {}
+    for r in rel_names:
+        for a in edb[r].attrs:
+            attr_count[a] = attr_count.get(a, 0) + 1
+    used = set(attr_count)
+    out_group_by = []
+    for rel, attr in group_by:
+        if attr_count.get(attr, 0) < 2:
+            out_group_by.append((rel, attr))
+            continue
+        copy = attr + COPY_SUFFIX
+        while copy in used:
+            copy += "_"
+        used.add(copy)
+        edb.add(edb[rel].with_column(copy, edb[rel].columns[attr]))
+        out_group_by.append((rel, copy))
+        joined_in = sorted(r for r in rel_names if attr in edb[r].attrs)
+        notes.append(
+            f"copy group attr {rel}.{attr} -> {copy} "
+            f"(joins {', '.join(joined_in)})"
+        )
+    return edb, out_group_by
+
+
+def _best_root(
+    query: JoinAggQuery, db: Database, measures: dict[str, str]
+) -> tuple[Prepared, tuple[str, ...]]:
+    """Cost-based root search: encode once, fold/decompose per candidate
+    group-relation root, keep the minimum estimated peak message.  Every
+    rejected root's reason is kept for ``explain()`` and errors."""
+    schema = resolve_schema(query, db)
+    dicts, encoded = encode_query(query, db, schema, measures=measures)
+    best: tuple[Prepared, int] | None = None
+    failures: list[str] = []
+    for root in dict.fromkeys(r for r, _ in query.group_by):
+        try:
+            p = finish_prepare(
+                query, schema, dicts, encoded, root=root, measures=measures
+            )
+        except ValueError as e:
+            failures.append(f"{root}: {e}")
+            continue
+        peak = peak_message_bytes(p)
+        if best is None or peak < best[1]:
+            best = (p, peak)
+    if best is None:
+        detail = "; ".join(failures) if failures else "no candidates"
+        raise ValueError(f"no valid group-relation root ({detail})")
+    return best[0], tuple(failures)
+
+
+def _channelize(aggs, resolve_rel):
+    """Named aggregates -> (channels, minmax requests, assembly recipes)."""
+    channels: list[Channel] = [COUNT_CHANNEL]
+    minmax: list[MinMaxRequest] = []
+    assemble: dict[str, tuple] = {}
+    for name, agg in aggs:
+        if agg.kind == "count":
+            assemble[name] = ("count",)
+            continue
+        rel, attr = agg.measure
+        target = (resolve_rel(rel), attr)
+        if agg.kind in ("sum", "avg"):
+            ch = Channel("sum", target)
+            if ch not in channels:
+                channels.append(ch)
+            assemble[name] = (agg.kind, ch)
+        elif agg.kind in ("min", "max"):
+            req = MinMaxRequest(agg.kind, target)
+            if req not in minmax:
+                minmax.append(req)
+            assemble[name] = ("minmax", req)
+        else:
+            raise ValueError(f"unknown aggregate kind {agg.kind!r}")
+    return tuple(channels), tuple(minmax), assemble
+
+
+def _display_names(group_attrs) -> tuple[str, ...]:
+    attrs = [a for _, a in group_attrs]
+    return tuple(a if attrs.count(a) == 1 else f"{r}.{a}" for r, a in group_attrs)
+
+
+def _assemble(plan: Plan, outputs: list[EngineOutput]) -> AggResult:
+    prep = plan.prep
+    codes = np.concatenate([o.group_codes for o in outputs], axis=0)
+    chan = np.concatenate([o.channel_values for o in outputs], axis=0)
+    mm = {
+        req: np.concatenate([o.minmax_values[req] for o in outputs])
+        for req in plan.minmax
+    }
+    if len(codes):
+        order = np.lexsort(codes.T[::-1])
+        codes, chan = codes[order], chan[order]
+        mm = {req: v[order] for req, v in mm.items()}
+
+    cols: dict[str, np.ndarray] = {}
+    for i, (disp, (_, attr)) in enumerate(zip(plan.group_display, prep.group_attrs)):
+        cols[disp] = prep.dicts[attr].decode(codes[:, i])
+
+    ci = plan.channels.index(COUNT_CHANNEL)
+    cnt = chan[:, ci]
+    kinds: dict[str, str] = {}
+    for name, agg in plan.aggs:
+        recipe = plan.assemble[name]
+        kinds[name] = agg.kind
+        if recipe[0] == "count":
+            cols[name] = cnt.copy()
+        elif recipe[0] == "sum":
+            cols[name] = chan[:, plan.channels.index(recipe[1])].copy()
+        elif recipe[0] == "avg":
+            s = chan[:, plan.channels.index(recipe[1])]
+            with np.errstate(invalid="ignore", divide="ignore"):
+                cols[name] = np.where(cnt > 0, s / np.maximum(cnt, 1), 0.0)
+        else:  # minmax
+            cols[name] = mm[recipe[1]].copy()
+
+    return AggResult(
+        group_names=plan.group_display,
+        agg_names=tuple(n for n, _ in plan.aggs),
+        agg_kinds=kinds,
+        relation=Relation("result", cols),
+    )

@@ -28,10 +28,14 @@ class DataGraph:
     node_type: list[int] = field(default_factory=list)
     # adjacency (built as lists, frozen into CSR by freeze())
     _adj: list[list[tuple[int, int]]] = field(default_factory=list)
+    # channel mode: per-source lists of (k,) edge weight vectors, aligned
+    # 1:1 with _adj entries (DESIGN.md §6 multi-aggregate channels)
+    _adj_w: dict[int, list[np.ndarray]] = field(default_factory=dict)
     sources: list[int] = field(default_factory=list)
     # CSR arrays
     edge_dst: np.ndarray | None = None
     edge_mult: np.ndarray | None = None
+    edge_w: np.ndarray | None = None  # (E, k) in channel mode
     offsets: np.ndarray | None = None
 
     def add_node(self, rel: str, side: str, vals: tuple[int, ...], typ: int) -> int:
@@ -42,8 +46,12 @@ class DataGraph:
         self._adj.append([])
         return len(self.node_rel) - 1
 
-    def add_edge(self, src: int, dst: int, mult: int) -> None:
+    def add_edge(
+        self, src: int, dst: int, mult: int, w: np.ndarray | None = None
+    ) -> None:
         self._adj[src].append((dst, mult))
+        if w is not None:
+            self._adj_w.setdefault(src, []).append(w)
 
     def freeze(self) -> None:
         degs = [len(a) for a in self._adj]
@@ -51,10 +59,22 @@ class DataGraph:
         flat = [e for a in self._adj for e in a]
         self.edge_dst = np.array([d for d, _ in flat], dtype=np.int64)
         self.edge_mult = np.array([m for _, m in flat], dtype=np.int64)
+        if self._adj_w:
+            wflat = [
+                w for i in range(len(self._adj)) for w in self._adj_w.get(i, ())
+            ]
+            if len(wflat) != len(flat):
+                raise AssertionError("channel weights must cover every edge")
+            self.edge_w = np.stack(wflat) if wflat else None
 
     def out(self, n: int) -> list[tuple[int, int]]:
         lo, hi = self.offsets[n], self.offsets[n + 1]
         return list(zip(self.edge_dst[lo:hi].tolist(), self.edge_mult[lo:hi].tolist()))
+
+    def out_w(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Channel-mode adjacency: (dst ids, (deg, k) weight matrix)."""
+        lo, hi = self.offsets[n], self.offsets[n + 1]
+        return self.edge_dst[lo:hi], self.edge_w[lo:hi]
 
     @property
     def num_nodes(self) -> int:
@@ -73,10 +93,22 @@ class DataGraph:
         return node_bytes + edge_bytes
 
 
-def build_data_graph(prep: Prepared) -> DataGraph:
-    """Stage 1: load relations into the data graph (Section III-E)."""
+def build_data_graph(
+    prep: Prepared,
+    weight_channels: dict[str, np.ndarray] | None = None,
+    channels: int | None = None,
+) -> DataGraph:
+    """Stage 1: load relations into the data graph (Section III-E).
+
+    ``channels=k`` builds the graph in *channel mode*: every edge carries a
+    (k,) weight vector — a relation's rows default to their multiplicity
+    replicated, ``weight_channels[rel]`` (an (n, k) matrix) overrides a
+    measure relation's rows with per-channel payloads, and inter-relation
+    hops weigh 1 — so one DFS propagates k semiring channels at once.
+    """
     deco = prep.decomposition
     g = DataGraph(prep)
+    weight_channels = weight_channels or {}
 
     # node indices: (rel, side) -> {code tuple -> node id}
     index: dict[tuple[str, str], dict[tuple[int, ...], int]] = {}
@@ -107,12 +139,21 @@ def build_data_graph(prep: Prepared) -> DataGraph:
         li = [er.attrs.index(a) for a in node.x_l]
         ri = [er.attrs.index(a) for a in node.x_r]
         lt, rt = side_type(rel, "l"), side_type(rel, "r")
-        for row, cnt in zip(er.codes, er.count):
+        wc = weight_channels.get(rel)
+        for i_row, (row, cnt) in enumerate(zip(er.codes, er.count)):
             lvals = tuple(int(row[i]) for i in li)
             rvals = tuple(int(row[i]) for i in ri)
             nl = node_of(rel, "l", lvals, lt)
             nr = node_of(rel, "r", rvals, rt)
-            g.add_edge(nl, nr, int(cnt))
+            if channels is None:
+                g.add_edge(nl, nr, int(cnt))
+            else:
+                w = (
+                    wc[i_row]
+                    if wc is not None
+                    else np.full(channels, float(cnt))
+                )
+                g.add_edge(nl, nr, int(cnt), w)
             if lt == SOURCE:
                 pass  # collected below from the registry
 
@@ -132,10 +173,11 @@ def build_data_graph(prep: Prepared) -> DataGraph:
             for cvals, cid in index.get((child, "l"), {}).items():
                 key = tuple(cvals[i] for i in cpos)
                 buckets.setdefault(key, []).append(cid)
+            hop_w = None if channels is None else np.ones(channels)
             for pvals, pid_ in ptable.items():
                 key = tuple(pvals[i] for i in ppos)
                 for cid in buckets.get(key, ()):  # no match -> dead end
-                    g.add_edge(pid_, cid, 1)
+                    g.add_edge(pid_, cid, 1, hop_w)
 
     g.sources = sorted(index.get((deco.root, "l"), {}).values())
     g.freeze()

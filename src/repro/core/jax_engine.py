@@ -172,17 +172,105 @@ def execute_jax(
             np.add.at(t, tuple(er.codes[:, i] for i in range(len(er.attrs))),
                       er.payloads["sum"].astype(np.float32))
             tensors[rel] = jnp.asarray(t)
-        jitted = _JIT_CACHE.get(prog.plan_key)
-        if jitted is None:
-            if len(_JIT_CACHE) >= _PROGRAM_CACHE_MAX:
-                _JIT_CACHE.clear()
-            jitted = _JIT_CACHE.setdefault(prog.plan_key, jax.jit(prog.fn))
+        jitted = _jit_for(prog.plan_key, prog.fn)
         arr = np.asarray(jitted(tensors))
         return _decode(prep, arr)
 
     if mode == "kernels":
         return _execute_kernels(query, prep, interpret)
     raise ValueError(mode)
+
+
+def _channelize_plan(
+    plan: tuple, root: str, z_flags: dict[str, bool]
+) -> tuple[tuple, bool]:
+    """Add a leading batch axis ``Z`` to every einsum term whose tensor (or
+    subtree message) carries per-channel weights.
+
+    ``Z`` as a batch axis gives exactly the diagonal semantics a channel
+    needs: channel ``c`` of the output combines channel ``c`` of every
+    channelized operand — k independent scalar programs fused into one
+    einsum (DESIGN.md §6).
+    """
+    carries: dict[str, bool] = {}
+    out_plan = []
+    for rel, expr, children in plan:
+        ins, out = expr.split("->")
+        if "Z" in expr:
+            raise ValueError("einsum axis letters exhausted (Z is reserved)")
+        terms = ins.split(",")
+        flags = [z_flags.get(rel, False)] + [carries[c] for c in children]
+        carry = any(flags)
+        if carry:
+            terms = [("Z" + t) if fl else t for t, fl in zip(terms, flags)]
+            out = "Z" + out
+        carries[rel] = carry
+        out_plan.append((rel, ",".join(terms) + "->" + out, children))
+    return tuple(out_plan), carries[root]
+
+
+def execute_jax_channels(
+    prep: Prepared,
+    channel_measures: tuple[str | None, ...],
+    dtype=np.float32,
+) -> np.ndarray:
+    """One jitted einsum pass computing k COUNT/SUM channels at once.
+
+    ``channel_measures[c]`` names the relation whose dense tensor carries
+    its ``sum`` payload in channel ``c`` (None = COUNT weights).  Returns a
+    ``(k, *group_dims)`` float array over the canonical group axes.
+    Exact while every partial product stays below 2**24 (f32), like the
+    single-aggregate dense path.
+    """
+    k = len(channel_measures)
+    z_rels = sorted({r for r in channel_measures if r is not None})
+    plan, root = _dense_plan(prep)
+
+    if not z_rels:  # all-COUNT bundle: one scalar program, replicated
+        prog = build_dense_program(prep)
+        jitted = _jit_for(prog.plan_key, prog.fn)
+        arr = np.asarray(jitted(prog.input_arrays(dtype)))
+        return np.broadcast_to(arr[None], (k,) + arr.shape).copy()
+
+    chplan, root_carries = _channelize_plan(
+        plan, root, {r: True for r in z_rels}
+    )
+    assert root_carries, z_rels
+    key = ("channels", chplan, root)
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        if len(_FN_CACHE) >= _PROGRAM_CACHE_MAX:
+            _FN_CACHE.clear()
+        fn = _FN_CACHE.setdefault(key, _fn_from_plan(chplan, root))
+
+    tensors: dict[str, jax.Array] = {}
+    for r in prep.encoded:
+        if r not in z_rels:
+            tensors[r] = jnp.asarray(dense_tensor(prep, r, dtype))
+            continue
+        er = prep.encoded[r]
+        dims = tuple(prep.dicts[a].size for a in er.attrs)
+        cnt = dense_tensor(prep, r, dtype)
+        pay = np.zeros(dims, dtype=dtype)
+        np.add.at(
+            pay,
+            tuple(er.codes[:, i] for i in range(len(er.attrs))),
+            er.payloads["sum"].astype(dtype),
+        )
+        tensors[r] = jnp.asarray(
+            np.stack([pay if channel_measures[c] == r else cnt for c in range(k)])
+        )
+    jitted = _jit_for(key, fn)
+    return np.asarray(jitted(tensors))
+
+
+def _jit_for(key, fn) -> Callable:
+    jitted = _JIT_CACHE.get(key)
+    if jitted is None:
+        if len(_JIT_CACHE) >= _PROGRAM_CACHE_MAX:
+            _JIT_CACHE.clear()
+        jitted = _JIT_CACHE.setdefault(key, jax.jit(fn))
+    return jitted
 
 
 def _execute_kernels(query, prep: Prepared, interpret) -> dict[tuple, float]:

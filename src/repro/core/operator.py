@@ -22,8 +22,16 @@ from repro.relational.relation import Database
 DEFAULT_MEMORY_BUDGET = 512 << 20  # bytes of message memory before streaming
 
 
-def peak_message_bytes(prep: Prepared) -> int:
-    """Estimated peak message bytes of the tensor-engine contraction."""
+class UnsupportedPlanOption(ValueError):
+    """A plan option the chosen engine cannot honor (e.g. ``stream`` or
+    ``memory_budget`` on the jax/ref engines).  Raised instead of the old
+    behavior of silently ignoring the option."""
+
+
+def node_message_bytes(prep: Prepared) -> dict[str, int]:
+    """Estimated message bytes per decomposition-tree node — the currency
+    of cost-based root choice and of ``Plan.explain()``'s per-node
+    annotations."""
     deco = prep.decomposition
 
     def subtree_gattrs(rel: str) -> list[str]:
@@ -35,7 +43,7 @@ def peak_message_bytes(prep: Prepared) -> int:
             out.extend(subtree_gattrs(c))
         return out
 
-    peak = 0
+    sizes: dict[str, int] = {}
     for rel in deco.order:
         node = deco.nodes[rel]
         if node.parent is None:
@@ -48,8 +56,13 @@ def peak_message_bytes(prep: Prepared) -> int:
         size = 8
         for a in list(up) + subtree_gattrs(rel):
             size *= prep.dicts[a].size
-        peak = max(peak, size)
-    return peak
+        sizes[rel] = size
+    return sizes
+
+
+def peak_message_bytes(prep: Prepared) -> int:
+    """Estimated peak message bytes of the tensor-engine contraction."""
+    return max(node_message_bytes(prep).values())
 
 
 def estimate_plan(
@@ -84,17 +97,20 @@ def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
         return estimate_plan(query, db)
     best: tuple[Prepared, int] | None = None
     group_rels = {r for r, _ in query.group_by}
+    failures: list[str] = []
     for root in query.relations:
         if root not in group_rels:
             continue
         try:
             prep, peak = estimate_plan(query, db, root=root)
-        except ValueError:
+        except ValueError as e:
+            failures.append(f"{root}: {e}")
             continue
         if best is None or peak < best[1]:
             best = (prep, peak)
     if best is None:
-        raise ValueError("no valid group-relation root")
+        detail = "; ".join(failures) if failures else "no group relation in query"
+        raise ValueError(f"no valid group-relation root ({detail})")
     return best
 
 
@@ -130,17 +146,21 @@ def maintain(
     node and a delta re-propagates only along its dirty root-path, so a
     small delta refreshes orders of magnitude faster than ``join_agg``.
     Cyclic queries compose with the GHD compiler — only the bags a delta
-    touches re-materialize."""
-    from repro.incremental.maintained import MaintainedJoinAgg
+    touches re-materialize.
 
-    return MaintainedJoinAgg(query, db, engine=engine)
+    Thin shim over the logical planner (:mod:`repro.api`): equivalent to
+    ``Q.from_query(query).engine(engine).maintain(db)``.
+    """
+    from repro.api import Q
+
+    return Q.from_query(query).engine(engine).maintain(db)
 
 
 def join_agg(
     query: JoinAggQuery,
     db: Database,
     engine: str = "tensor",
-    memory_budget: int = DEFAULT_MEMORY_BUDGET,
+    memory_budget: int | None = None,
     stream: tuple[str, int] | None = None,
 ) -> dict[tuple, float]:
     """Execute a group-by aggregate over a multi-way join.
@@ -153,24 +173,18 @@ def join_agg(
     previously a hard error — are compiled through a generalized
     hypertree decomposition (``repro.ghd``) into an equivalent acyclic
     query over materialized bag relations, then run on the same engines.
+
+    Thin shim over the logical planner (:mod:`repro.api`): builds a
+    single-aggregate :class:`~repro.api.Plan` and returns its result as
+    the legacy ``{group values: aggregate}`` dict.  An explicit
+    ``memory_budget``/``stream`` on an engine that cannot honor it raises
+    :class:`UnsupportedPlanOption` (previously silently ignored).
     """
-    from repro.ghd.rewrite import ghd_join_agg, is_cyclic_query
+    from repro.api import Q
 
-    if is_cyclic_query(query, db):
-        return ghd_join_agg(
-            query, db, engine=engine, memory_budget=memory_budget, stream=stream
-        )
-
-    if engine == "ref":
-        from repro.core.ref_engine import execute_ref
-
-        prep = prepare(query, db)
-        return execute_ref(query, db, prep=prep)
-
-    prep, peak = choose_root(query, db)
-    if engine == "jax":
-        from repro.core.jax_engine import execute_jax
-
-        return execute_jax(query, db, prep=prep)
-
-    return run_tensor(query, prep, peak, memory_budget, stream)
+    q = Q.from_query(query).engine(engine)
+    if memory_budget is not None:
+        q = q.memory_budget(memory_budget)
+    if stream is not None:
+        q = q.stream(*stream)
+    return q.plan(db).execute().to_dict()

@@ -18,7 +18,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.decomposition import Decomposition, decompose
-from repro.core.hypergraph import Hypergraph, build_hypergraph
+from repro.core.hypergraph import Hypergraph
 from repro.core.query import JoinAggQuery, QuerySchema, resolve_schema
 from repro.relational.encoding import (
     Dictionary,
@@ -43,10 +43,16 @@ class Prepared:
     # relation — the fold baked its counts into the host, so the host's
     # subtree must be rebuilt rather than delta-patched (DESIGN.md §4)
     fold_hosts: dict[str, str] = None  # type: ignore[assignment]
+    # measure relation -> relation now carrying its payloads after the
+    # fold rewrite (resolved chains); the logical planner re-points each
+    # aggregate channel through this map (DESIGN.md §6)
+    measure_moves: dict[str, str] = None  # type: ignore[assignment]
 
     def __post_init__(self) -> None:
         if self.fold_hosts is None:
             self.fold_hosts = {}
+        if self.measure_moves is None:
+            self.measure_moves = {}
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:
@@ -102,12 +108,21 @@ def _fold_leaf_multipliers(
         for f in list(encoded):
             if f in schema.group_of:
                 continue
-            if f in keep and not encoded[f].payloads:
-                continue
             hosts = [
                 p for p in encoded
                 if p != f and set(relevant[f]) <= set(relevant[p])
             ]
+            if f in keep:
+                if not encoded[f].payloads:
+                    continue
+                # a measure relation folds only into a payload-free host:
+                # two payload sets cannot merge under one sum/min/max key
+                # space (multi-aggregate bundles may keep several measure
+                # relations live at once)
+                hosts = [
+                    p for p in hosts
+                    if p not in keep and not encoded[p].payloads
+                ]
             if not hosts:
                 continue
             p = hosts[0]
@@ -189,19 +204,38 @@ def _fold_leaf_multipliers(
     return encoded, folded, relevant, moved, host_of
 
 
+def query_measures(
+    query: JoinAggQuery, measures: dict[str, str] | None = None
+) -> dict[str, str]:
+    """Measure map ``relation -> measured attr``.
+
+    Defaults to the query's single aggregate; the logical planner passes
+    the union over a whole named-aggregate bundle instead (DESIGN.md §6).
+    """
+    if measures is not None:
+        return dict(measures)
+    m = query.agg.measure
+    return {m[0]: m[1]} if m else {}
+
+
 def encode_query(
-    query: JoinAggQuery, db: Database, schema: QuerySchema, growable: bool = False
+    query: JoinAggQuery,
+    db: Database,
+    schema: QuerySchema,
+    growable: bool = False,
+    measures: dict[str, str] | None = None,
 ) -> tuple[dict[str, Dictionary], dict[str, EncodedRelation]]:
     """Front half of :func:`prepare`: shared dictionaries + encoded relations."""
     all_attrs = {a for attrs in schema.relevant.values() for a in attrs}
     rels = [db[r] for r in query.relations]
     dicts = build_dictionaries(rels, all_attrs, growable=growable)
 
-    measure = query.agg.measure
+    measures = query_measures(query, measures)
     encoded: dict[str, EncodedRelation] = {}
     for rname in query.relations:
-        m = measure[1] if (measure and measure[0] == rname) else None
-        encoded[rname] = encode_relation(db[rname], schema.relevant[rname], dicts, m)
+        encoded[rname] = encode_relation(
+            db[rname], schema.relevant[rname], dicts, measures.get(rname)
+        )
     return dicts, encoded
 
 
@@ -211,6 +245,7 @@ def finish_prepare(
     dicts: dict[str, Dictionary],
     encoded: dict[str, EncodedRelation],
     root: str | None = None,
+    measures: dict[str, str] | None = None,
 ) -> Prepared:
     """Back half of :func:`prepare`: fold rewrite + decomposition.
 
@@ -218,9 +253,14 @@ def finish_prepare(
     did not come from raw tuple counts — the GHD compiler feeds materialized
     bag relations (weights = within-bag join products) through here so cyclic
     queries reuse the exact same fold/decompose/engine pipeline.
+
+    ``measures`` (relation -> measured attr) widens the fold rewrite's
+    keep-set to every measure relation of a multi-aggregate bundle; the
+    resulting :attr:`Prepared.measure_moves` records where each measure's
+    payloads ended up.
     """
     measure = query.agg.measure
-    keep = {measure[0]} if measure else set()
+    keep = set(query_measures(query, measures))
     encoded = dict(encoded)
     encoded, folded, relevant, moved, host_of = _fold_leaf_multipliers(
         schema, encoded, dicts, keep
@@ -232,14 +272,21 @@ def finish_prepare(
             cur = host_of[cur]
         fold_hosts[f] = cur
 
+    measure_moves: dict[str, str] = {}
+    for m_rel in query_measures(query, measures):
+        cur = m_rel
+        while cur in moved:
+            cur = moved[cur]
+        if cur != m_rel:
+            measure_moves[m_rel] = cur
+
     if measure and measure[0] in moved:
         # the measure relation folded away; re-point the aggregate at the
         # relation now carrying its payloads
-        cur = measure[0]
-        while cur in moved:
-            cur = moved[cur]
         query = JoinAggQuery(
-            query.relations, query.group_by, type(query.agg)(cur, measure[1])
+            query.relations,
+            query.group_by,
+            type(query.agg)(measure_moves[measure[0]], measure[1]),
         )
 
     if folded:
@@ -257,7 +304,9 @@ def finish_prepare(
 
     hg = Hypergraph({r: frozenset(relevant[r]) for r in encoded})
     deco = decompose(schema, hg, root=root)
-    return Prepared(query, schema, dicts, encoded, deco, folded, fold_hosts)
+    return Prepared(
+        query, schema, dicts, encoded, deco, folded, fold_hosts, measure_moves
+    )
 
 
 def prepare(
@@ -265,10 +314,13 @@ def prepare(
     db: Database,
     root: str | None = None,
     growable: bool = False,
+    measures: dict[str, str] | None = None,
 ) -> Prepared:
     """``growable=True`` builds :class:`GrowableDictionary` encoders so the
     result can be maintained under inserts/deletes (``repro.incremental``):
     new attribute values append codes and domains only ever grow."""
     schema = resolve_schema(query, db)
-    dicts, encoded = encode_query(query, db, schema, growable=growable)
-    return finish_prepare(query, schema, dicts, encoded, root=root)
+    dicts, encoded = encode_query(
+        query, db, schema, growable=growable, measures=measures
+    )
+    return finish_prepare(query, schema, dicts, encoded, root=root, measures=measures)

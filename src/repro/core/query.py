@@ -65,7 +65,9 @@ def resolve_schema(
         if attr in join_attrs and not allow_group_join_attrs:
             raise ValueError(
                 f"group attr {rel}.{attr} participates in a join; "
-                "copy the column under a fresh name first (Section II-A)"
+                "copy the column under a fresh name first (Section II-A) — "
+                "the logical planner (repro.api.Q) performs this copy "
+                "automatically"
             )
         if rel in group_of:
             raise ValueError(

@@ -185,3 +185,113 @@ def _count_terminal(g: DataGraph, s: int) -> float:
         return sum(walk(d, c * m) for d, m in outs)
 
     return walk(s, 1.0)
+
+
+# --- multi-channel execution (DESIGN.md §6) ------------------------------
+#
+# The DFS propagates *products of edge weights*; COUNT and SUM only differ
+# in which weight the measure relation's edges carry.  Channel mode runs k
+# such semirings in one traversal: running counts, path-id counts and
+# c-pair counts all become (k,) vectors, multiplied and accumulated
+# elementwise.  ``_combine`` is already generic over the value type.
+
+
+def _traverse_ch(g: DataGraph, source: int, k: int) -> TraversalState:
+    cpairs: dict[tuple[str, Pid], dict[int, np.ndarray]] = defaultdict(
+        lambda: defaultdict(lambda: np.zeros(k))
+    )
+    path_counts: dict[Pid, np.ndarray] = {}
+    child_pids: dict[Pid, list[int]] = defaultdict(list)
+    node_type = g.node_type
+    node_rel = g.node_rel
+    node_vals = g.node_vals
+
+    stack: list[tuple[int, Pid, np.ndarray]] = [(source, (), np.ones(k))]
+    while stack:
+        n, pid, c = stack.pop()
+        dsts, ws = g.out_w(n)
+        for dst, w in zip(dsts.tolist(), ws):
+            c2 = c * w
+            t = node_type[dst]
+            if t == GROUP:
+                cpairs[(node_rel[dst], pid)][node_vals[dst][0]] += c2
+            elif t == BRANCHING:
+                pid2 = pid + (dst,)
+                if pid2 in path_counts:
+                    path_counts[pid2] = path_counts[pid2] + c2
+                else:
+                    path_counts[pid2] = c2
+                    child_pids[pid].append(dst)
+                    stack.append((dst, pid2, np.ones(k)))
+            else:
+                stack.append((dst, pid, c2))
+    return TraversalState(
+        {key: dict(v) for key, v in cpairs.items()}, path_counts, dict(child_pids)
+    )
+
+
+def _terminal_ch(g: DataGraph, s: int, k: int) -> np.ndarray:
+    def walk(n: int, c: np.ndarray) -> np.ndarray:
+        dsts, ws = g.out_w(n)
+        if len(dsts) == 0:
+            return c
+        total = np.zeros(k)
+        for dst, w in zip(dsts.tolist(), ws):
+            total += walk(dst, c * w)
+        return total
+
+    return walk(s, np.ones(k))
+
+
+def execute_ref_channels(
+    prep: Prepared, channel_measures: tuple[str | None, ...]
+) -> dict[tuple[int, ...], np.ndarray]:
+    """Run k COUNT/SUM channels in one paper-faithful DFS.
+
+    ``channel_measures[c]`` names the relation whose edges carry their
+    ``sum`` payload in channel ``c`` (None = COUNT).  Returns group *code*
+    tuples (canonical group order) mapped to (k,) value vectors — decoding
+    is the caller's job, so the logical planner can assemble columnar
+    results uniformly across engines.
+    """
+    k = len(channel_measures)
+    weight_channels: dict[str, np.ndarray] = {}
+    for rel in {r for r in channel_measures if r is not None}:
+        er = prep.encoded[rel]
+        cols = [
+            er.payloads["sum"].astype(np.float64)
+            if channel_measures[c] == rel
+            else er.count.astype(np.float64)
+            for c in range(k)
+        ]
+        weight_channels[rel] = np.stack(cols, axis=1)
+    g = build_data_graph(prep, weight_channels=weight_channels, channels=k)
+    deco = prep.decomposition
+    canonical = [r for r, _ in prep.group_attrs]
+
+    result: dict[tuple[int, ...], np.ndarray] = {}
+    for s in g.sources:
+        st = _traverse_ch(g, s, k)
+        src_code = g.node_vals[s][0]
+
+        others = [r for r in canonical if r != deco.root]
+        if not others:
+            total = _terminal_ch(g, s, k)
+            if np.any(total):
+                key = (src_code,)
+                result[key] = result.get(key, 0) + total
+            continue
+
+        out = _combine(g, st, None, ())
+        if out is None:
+            continue
+        rels, combined = out
+        for key_codes, v in combined.items():
+            if not np.any(v):
+                continue
+            codes = {deco.root: src_code}
+            for r, c in zip(rels, key_codes):
+                codes[r] = c
+            key = tuple(codes[r] for r in canonical)
+            result[key] = result.get(key, 0) + v
+    return result

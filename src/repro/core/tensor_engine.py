@@ -56,6 +56,10 @@ def _tree_children(prep: Prepared) -> dict[str, list[str]]:
 
 
 class TensorEngine:
+    # trailing axes carried unchanged through every message: () for the
+    # scalar engine, (k,) for the k-channel subclass below
+    _chan: tuple[int, ...] = ()
+
     def __init__(
         self,
         prep: Prepared,
@@ -145,8 +149,11 @@ class TensorEngine:
             sh_dims = self._dims(shared)
             g_dims = self._dims(msg.group_attrs)
             m2 = msg.array.reshape(
-                int(np.prod(sh_dims, dtype=np.int64)) if sh_dims else 1,
-                int(np.prod(g_dims, dtype=np.int64)) if g_dims else 1,
+                (
+                    int(np.prod(sh_dims, dtype=np.int64)) if sh_dims else 1,
+                    int(np.prod(g_dims, dtype=np.int64)) if g_dims else 1,
+                )
+                + self._chan
             )
             if pos:
                 idx = np.ravel_multi_index(
@@ -180,12 +187,14 @@ class TensorEngine:
             out2 = (out2 > 0).astype(np.float64)
 
         # assemble axes: up_attrs, then group attrs in canonical order
+        # (any trailing channel axes stay last)
         gattrs = ([own_g] if own_g else []) + child_gattrs
         raw_attrs = list(kept_own) + child_gattrs
-        arr = out2.reshape(kept_dims + self._dims(tuple(child_gattrs)))
+        arr = out2.reshape(kept_dims + self._dims(tuple(child_gattrs)) + self._chan)
         want_g = self._canon_sort(gattrs)
         want = list(up_attrs) + want_g
         perm = [raw_attrs.index(a) for a in want]
+        perm += list(range(len(raw_attrs), arr.ndim))
         arr = np.transpose(arr, perm) if perm != list(range(len(perm))) else arr
         self.peak_message_bytes = max(self.peak_message_bytes, arr.nbytes)
         return Message(tuple(want), len(up_attrs), arr)
@@ -206,6 +215,56 @@ class TensorEngine:
         msg = self.message(self.deco.root, None)
         assert msg.attrs == tuple(self.canonical), (msg.attrs, self.canonical)
         return msg.array
+
+
+class ChannelTensorEngine(TensorEngine):
+    """``k`` semiring channels contracted in one leaves→root pass.
+
+    Weight vectors become ``(n, k)`` matrices — column ``c`` is channel
+    ``c``'s weight for that relation (its multiplicity, or a measure
+    payload) — and every message carries a trailing channel axis.  Per
+    channel the float operations run in the same order as a scalar
+    :class:`TensorEngine` pass with that channel's weights, so one
+    k-channel pass is bit-identical to k scalar passes (DESIGN.md §6).
+    """
+
+    def __init__(
+        self,
+        prep: Prepared,
+        k: int,
+        weights_override: dict[str, np.ndarray] | None = None,
+        domains: dict[str, int] | None = None,
+        encoded=None,
+    ):
+        super().__init__(prep, weights_override, False, domains, encoded)
+        self.k = k
+        self._chan = (k,)
+
+    def _weights(self, rel: str) -> np.ndarray:
+        w = self.weights_override.get(rel)
+        if w is None:
+            c = self.encoded[rel].count.astype(np.float64)
+            w = np.repeat(c[:, None], self.k, axis=1)
+        return w
+
+    def _contract_block(
+        self,
+        weights: np.ndarray,
+        gathers: list[tuple[np.ndarray, np.ndarray]],
+        keys: np.ndarray,
+        knum: int,
+    ) -> np.ndarray:
+        n = len(weights)
+        if n == 0:
+            width = 1
+            for m2, _ in gathers:
+                width *= m2.shape[1]
+            return np.zeros((knum, width, self.k), dtype=np.float64)
+        vals = weights.reshape(n, 1, self.k)
+        for m2, idx in gathers:
+            rows = m2[idx]  # (n, Gc, k)
+            vals = (vals[:, :, None, :] * rows[:, None, :, :]).reshape(n, -1, self.k)
+        return _segment_sum(keys, vals, knum)
 
 
 def _decode_result(
@@ -290,20 +349,27 @@ def execute_tensor(
     return result
 
 
-def _minmax(query, prep, encoded, domains, offsets) -> dict[tuple, float]:
-    """MIN/MAX(R.m): boolean reachability messages from every subtree, then
-    a (min/max, select) reduction over the measure relation's edges.
+def minmax_arrays(
+    prep: Prepared,
+    encoded,
+    domains,
+    rel_m: str,
+    kinds: tuple[str, ...],
+) -> dict[str, np.ndarray]:
+    """Dense MIN/MAX arrays over canonical group axes, one per ``kind``.
 
-    The measure relation must be the decomposition root for a single upward
-    pass; when it is not, we exploit that MIN/MAX ignore multiplicities and
-    re-prepare with the measure relation's *own* group attr... the general
-    case re-roots the tree at the measure relation (any root is valid for
-    the contraction; the paper's group-relation-root rule only matters for
-    its DFS anchoring)."""
-    rel_m, attr_m = query.agg.measure
-    is_min = query.agg.kind == "min"
-    # re-root the tree at the measure relation
-    from repro.core.decomposition import decompose
+    One boolean-reachability pass re-rooted at the measure relation is
+    shared by every requested kind (a multi-aggregate bundle asking for
+    both MIN and MAX of the same measure pays for one traversal): boolean
+    reachability messages flow from every subtree, then each kind runs
+    its (min/max, select) reduction over the measure relation's edges.
+    Unreached groups hold 0.0 — mask with a COUNT support before use,
+    since zeros can also be genuine MIN/MAX values.
+
+    The measure relation must be the root for a single upward pass; any
+    root is valid for the contraction (the paper's group-relation-root
+    rule only matters for its DFS anchoring), so we re-root at ``rel_m``.
+    """
     from repro.core.hypergraph import Hypergraph
 
     hg = Hypergraph({r: frozenset(prep.schema.relevant[r]) for r in encoded})
@@ -315,7 +381,6 @@ def _minmax(query, prep, encoded, domains, offsets) -> dict[tuple, float]:
 
     er = encoded[rel_m]
     n = er.num_rows
-    m = er.payloads["min" if is_min else "max"].astype(np.float64)
     node = deco.nodes[rel_m]
     reach = np.ones((n, 1))
     child_gattrs: list[str] = []
@@ -346,28 +411,43 @@ def _minmax(query, prep, encoded, domains, offsets) -> dict[tuple, float]:
         keys = np.zeros(n, dtype=np.int64)
     knum = int(np.prod(kdims, dtype=np.int64)) if kdims else 1
 
-    bad = np.inf if is_min else -np.inf
-    cand = np.where(reach > 0, m[:, None], bad)  # (n, G)
-    out = np.full((knum, cand.shape[1]), bad)
     if n:
         order = np.argsort(keys, kind="stable")
-        ks, cs = keys[order], cand[order]
+        ks = keys[order]
         bounds = np.flatnonzero(np.concatenate([[True], ks[1:] != ks[:-1]]))
-        red = (np.minimum if is_min else np.maximum).reduceat(cs, bounds, axis=0)
-        out[ks[bounds]] = red
 
     gattrs = ([own_g] if own_g else []) + child_gattrs
     raw = list(kept) + child_gattrs
-    arr = out.reshape(kdims + eng._dims(tuple(child_gattrs)))
     want = sorted(gattrs, key=eng.canonical.index)
     perm = [raw.index(a) for a in want]
-    if perm != list(range(len(perm))):
-        arr = np.transpose(arr, perm)
-    arr = np.where(np.isfinite(arr), arr, 0.0)
+
+    out_arrs: dict[str, np.ndarray] = {}
+    for kind in kinds:
+        is_min = kind == "min"
+        m = er.payloads[kind].astype(np.float64)
+        bad = np.inf if is_min else -np.inf
+        cand = np.where(reach > 0, m[:, None], bad)  # (n, G)
+        out = np.full((knum, cand.shape[1]), bad)
+        if n:
+            cs = cand[order]
+            red = (np.minimum if is_min else np.maximum).reduceat(
+                cs, bounds, axis=0
+            )
+            out[ks[bounds]] = red
+        arr = out.reshape(kdims + eng._dims(tuple(child_gattrs)))
+        if perm != list(range(len(perm))):
+            arr = np.transpose(arr, perm)
+        out_arrs[kind] = np.where(np.isfinite(arr), arr, 0.0)
+    return out_arrs
+
+
+def _minmax(query, prep, encoded, domains, offsets) -> dict[tuple, float]:
+    """Single-aggregate MIN/MAX(R.m) execution path (see minmax_arrays)."""
+    rel_m, _ = query.agg.measure
+    kind = query.agg.kind
+    arr = minmax_arrays(prep, encoded, domains, rel_m, (kind,))[kind]
     # reachability mask (zeros can be genuine MIN/MAX values): a COUNT run
-    cnt = TensorEngine(prep, domains=domains, encoded=encoded)
-    cnt.deco = deco
-    cmask = cnt.run() > 0
+    cmask = TensorEngine(prep, domains=domains, encoded=encoded).run() > 0
     res: dict[tuple, float] = {}
     nzi = np.nonzero(cmask)
     cols = []

@@ -23,7 +23,12 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.hypergraph import Hypergraph
-from repro.core.prepare import Prepared, encode_query, finish_prepare
+from repro.core.prepare import (
+    Prepared,
+    encode_query,
+    finish_prepare,
+    query_measures,
+)
 from repro.core.query import JoinAggQuery, QuerySchema, resolve_schema
 from repro.ghd.bags import MAX_DENSE_ELEMS, BagTable, materialize_bag
 from repro.ghd.hypertree import GHD, build_ghd
@@ -57,6 +62,10 @@ class GHDPlan:
     derived_schema: QuerySchema = None  # type: ignore[assignment]
     derived_dicts: dict[str, Dictionary] = None  # type: ignore[assignment]
     bag_out_attrs: dict[str, tuple[str, ...]] = None  # type: ignore[assignment]
+    # original measure relation -> covering bag (the logical planner
+    # re-points each aggregate channel through this, then through the
+    # derived Prepared.measure_moves)
+    measure_bags: dict[str, str] = None  # type: ignore[assignment]
 
     def invalidated_bags(self, rel: str) -> list[str]:
         """Bags whose materialization a delta on input relation ``rel``
@@ -89,24 +98,41 @@ def compile_ghd(
     schema: QuerySchema | None = None,
     dicts: dict[str, Dictionary] | None = None,
     encoded: dict[str, EncodedRelation] | None = None,
+    measures: dict[str, str] | None = None,
 ) -> GHDPlan:
     """Compile a (cyclic) query down to the acyclic JOIN-AGG pipeline.
 
     ``schema``/``dicts``/``encoded`` let a caller that already holds the
     encoded input state (the incremental maintainer, which keeps it live
-    under deltas) skip re-encoding the database.
+    under deltas) skip re-encoding the database.  ``measures`` widens the
+    measure set to a whole multi-aggregate bundle (DESIGN.md §6); each
+    measure relation's payloads ride into its covering bag.
     """
+    from repro.core.operator import UnsupportedPlanOption
+
     if not query.group_by:
         raise ValueError("query needs at least one group-by attribute")
+    measures = query_measures(query, measures)
     if schema is None:
         schema = resolve_schema(query, db, allow_group_join_attrs=True)
     if dicts is None or encoded is None:
-        dicts, encoded = encode_query(query, db, schema)
+        dicts, encoded = encode_query(query, db, schema, measures=measures)
 
     edges = {r: frozenset(schema.relevant[r]) for r in query.relations}
     domains = {a: dicts[a].size for attrs in edges.values() for a in attrs}
     rows = {r: encoded[r].num_rows for r in query.relations}
     ghd = build_ghd(edges, domains, rows, group_of=schema.group_of)
+
+    measure_bag: dict[str, str] = {}
+    for m_rel in measures:
+        b = ghd.cover_of[m_rel]
+        if b in measure_bag.values():
+            raise UnsupportedPlanOption(
+                "two measure relations land in the same GHD bag; their "
+                "sum/min/max payloads cannot share one bag key space — "
+                "split the query or measure a single relation"
+            )
+        measure_bag[m_rel] = b
 
     bag_attr_count: dict[str, int] = {}
     for b in ghd.order:
@@ -163,6 +189,7 @@ def compile_ghd(
     if agg.measure is not None:
         agg = type(agg)(ghd.cover_of[agg.measure[0]], agg.measure[1])
     derived_query = JoinAggQuery(tuple(ghd.order), tuple(derived_group_by), agg)
+    derived_measures = {measure_bag[r]: a for r, a in measures.items()}
 
     dicts_d: dict[str, Dictionary] = {}
     for b, bt in bag_tables.items():
@@ -193,7 +220,10 @@ def compile_ghd(
     from repro.core.operator import peak_message_bytes
 
     if root is not None:
-        prep = finish_prepare(derived_query, schema_d, dicts_d, encoded_d, root=root)
+        prep = finish_prepare(
+            derived_query, schema_d, dicts_d, encoded_d, root=root,
+            measures=derived_measures,
+        )
     else:
         best: tuple[Prepared, int] | None = None
         # sorted: peak ties must not depend on set (string-hash) order,
@@ -201,7 +231,8 @@ def compile_ghd(
         for cand in sorted({b for b, _ in derived_group_by}):
             try:
                 p = finish_prepare(
-                    derived_query, schema_d, dicts_d, encoded_d, root=cand
+                    derived_query, schema_d, dicts_d, encoded_d, root=cand,
+                    measures=derived_measures,
                 )
             except ValueError:
                 continue
@@ -225,6 +256,7 @@ def compile_ghd(
         derived_schema=schema_d,
         derived_dicts=dicts_d,
         bag_out_attrs=bag_out_attrs,
+        measure_bags=measure_bag,
     )
 
 

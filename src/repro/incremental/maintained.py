@@ -34,8 +34,7 @@ the paper's memory-efficiency claim extends to maintenance.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Mapping
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -188,6 +187,16 @@ class MaintainedJoinAgg:
     def result(self) -> dict[tuple, float]:
         """The current group → aggregate map (no recomputation)."""
         return dict(self.result_dict)
+
+    def result_relation(self) -> Relation:
+        """The current result in the columnar layout of the logical-plan
+        API (group columns + one value column), sorted by group key."""
+        rows = sorted(self.result_dict)
+        cols: dict[str, np.ndarray] = {}
+        for i, (_, attr) in enumerate(self.prep.group_attrs):
+            cols[attr] = np.array([k[i] for k in rows])
+        cols[self.kind] = np.array([self.result_dict[k] for k in rows])
+        return Relation("result", cols)
 
     # ------------------------------------------------------------------
     # delta application

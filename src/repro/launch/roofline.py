@@ -26,7 +26,7 @@ import argparse
 import json
 import os
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.models.config import SHAPES
 
 PEAK_FLOPS = 197e12

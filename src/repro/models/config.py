@@ -1,7 +1,7 @@
 """Model configurations for the ten assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -21,7 +21,8 @@ import os
 # §Perf knob: statically skip fully-masked kv chunks in causal flash
 # attention (halves attention flops/bytes for long prefill).  Env-gated
 # so the paper-baseline lowering stays reproducible.
-_CAUSAL_SKIP = lambda: os.environ.get("REPRO_CAUSAL_SKIP") == "1"
+def _CAUSAL_SKIP():
+    return os.environ.get("REPRO_CAUSAL_SKIP") == "1"
 
 # ---------------------------------------------------------------- init
 

@@ -15,9 +15,6 @@ layers), whisper (audio enc-dec; stub frame embeddings).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

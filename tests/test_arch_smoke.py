@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config
-from repro.models.config import ShapeConfig
 from repro.models.model import get_model
 
 B, S = 2, 32

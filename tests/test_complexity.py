@@ -1,7 +1,6 @@
 """Section V complexity validation: JOIN-AGG memory scales with the
 *input* (O(ab) data graph), the traditional plan with the *intermediate*
 (O(n²/b)) — check the growth trends empirically."""
-import numpy as np
 
 from repro.baselines.binary_join import binary_join_agg
 from repro.core.operator import estimate_plan

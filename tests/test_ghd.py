@@ -6,7 +6,7 @@ from repro.aggregates.semiring import Avg, Max, Min, Sum
 from repro.core.operator import choose_root, estimate_plan, join_agg
 from repro.core.prepare import prepare
 from repro.core.query import JoinAggQuery
-from repro.data.queries import CYCLIC, four_cycle_like, triangle_like
+from repro.data.queries import CYCLIC
 from repro.ghd.bags import MAX_DENSE_ELEMS
 from repro.ghd.hypertree import build_ghd, verify_ghd
 from repro.ghd.rewrite import compile_ghd, is_cyclic_query
@@ -110,7 +110,9 @@ def bowtie_db(n=200, nodes=15, seed=4):
     per triangle, so the group attr ``a`` spans both bags and must be
     column-copied."""
     rng = np.random.default_rng(seed)
-    cols = lambda x, y: {x: rng.integers(0, nodes, n), y: rng.integers(0, nodes, n)}
+    def cols(x, y):
+        return {x: rng.integers(0, nodes, n), y: rng.integers(0, nodes, n)}
+
     db = Database.from_mapping(
         {
             "E1": cols("a", "b"), "E2": cols("b", "c"), "E3": cols("c", "a"),

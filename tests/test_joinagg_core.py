@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.aggregates.semiring import Avg, Max, Min, Sum
 from repro.core.operator import join_agg
 from repro.core.query import JoinAggQuery
 from repro.core.ref_engine import execute_ref

@@ -7,7 +7,6 @@ from hypothesis import given, settings, strategies as st
 
 pytestmark = pytest.mark.slow  # many randomized examples; run via `-m slow`
 
-from repro.core.operator import join_agg
 from repro.core.query import JoinAggQuery
 from repro.core.ref_engine import execute_ref
 from repro.core.tensor_engine import execute_tensor

@@ -22,7 +22,9 @@ def test_adamw_reduces_quadratic_loss():
     cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0)
     params = {"w": jnp.asarray([3.0, -2.0])}
     opt = adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
     for _ in range(100):
         g = jax.grad(loss)(params)
         params, opt, metrics = adamw_update(params, g, opt, cfg)
