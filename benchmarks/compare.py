@@ -1,0 +1,190 @@
+"""Perf-regression gate: compare a fresh ``BENCH_*.json`` against the
+checked-in baseline (``benchmarks/baseline_tiny.json``).
+
+    python -m benchmarks.compare benchmarks/baseline_tiny.json BENCH_tiny.json
+
+Per paper table the gate sums ``us_per_call`` over the records present in
+*both* runs, normalizes the baseline by the machine-speed ratio of *the
+other tables* (the two runs rarely share hardware — the baseline was
+recorded on one container, CI runs on whatever runner it gets; excluding
+the table under test keeps a heavy table's own regression from masking
+itself), and **fails (exit 1) on any table whose normalized time
+regressed by more than ``--threshold`` (default 30%)** and by more than
+``--min-delta-us`` in absolute terms (tiny-scale tables of a few hundred
+ms jitter past 30% run-to-run).  The normalization makes the gate catch
+*relative* regressions — one code path getting slower than the rest of
+the suite — which is the signature of a real perf bug; a uniform
+machine-wide slowdown is invisible to it by design.
+
+It also renders a markdown report — the per-table comparison plus the
+table-10 dense-vs-sparse peak-bytes delta — into ``$GITHUB_STEP_SUMMARY``
+when set (or ``--summary PATH``), so every PR shows its bench trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load_records(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("records", [])}
+
+
+def table_of(name: str) -> str:
+    return name.split(",", 1)[0]
+
+
+def table_totals(
+    records: dict[str, dict], names: set[str]
+) -> dict[str, float]:
+    out: dict[str, float] = defaultdict(float)
+    for name in names:
+        out[table_of(name)] += records[name]["us_per_call"]
+    return dict(out)
+
+
+def derived_field(rec: dict | None, key: str) -> str | None:
+    if rec is None:
+        return None
+    for part in rec.get("derived", "").split(";"):
+        if part.startswith(key + "="):
+            return part.split("=", 1)[1]
+    return None
+
+
+def sparse_delta_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-10 dense-vs-sparse peak-bytes delta as markdown rows."""
+    sparse = fresh.get("table10,CHAIN,jax_sparse")
+    dense = fresh.get("table10,CHAIN,jax_dense")
+    choice = fresh.get("table10,CHAIN,auto_choice")
+    if not sparse or not choice:
+        return ["_no table-10 records in this run_"]
+    lines = [
+        "| metric | dense | sparse |",
+        "|---|---:|---:|",
+        "| estimated peak (MB) | "
+        f"{derived_field(choice, 'est_dense_mb')} | "
+        f"{derived_field(choice, 'est_sparse_mb')} |",
+    ]
+    d_peak = derived_field(dense, "peak_mb")
+    s_peak = derived_field(sparse, "peak_mb")
+    if d_peak is not None:
+        lines.append(f"| measured peak (MB) | {d_peak} | {s_peak} |")
+        lines.append(
+            f"| time (µs) | {dense['us_per_call']:.0f} | "
+            f"{sparse['us_per_call']:.0f} |"
+        )
+    else:
+        skip = derived_field(dense, "skipped") or "not run"
+        lines.append(f"| measured peak (MB) | ✗ ({skip}) | {s_peak} |")
+        lines.append(f"| time (µs) | ✗ | {sparse['us_per_call']:.0f} |")
+    lines.append(
+        f"\nplanner choice: **{derived_field(choice, 'path')}** "
+        f"(dense/sparse estimate ratio "
+        f"{derived_field(choice, 'dense_over_sparse')})"
+    )
+    return lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--threshold", type=float, default=0.30,
+        help="max tolerated normalized per-table regression (default 0.30)",
+    )
+    ap.add_argument(
+        "--min-delta-us", type=float, default=100_000.0,
+        help="ignore regressions smaller than this many µs in absolute "
+        "terms. Tradeoff: tiny-scale tables of ~150 ms jitter past 30%% "
+        "run-to-run even on one machine (observed: +62 ms on table9), "
+        "so sub-floor tables are only gated against multi-x blowups; "
+        "the multi-second tables carry the fine-grained gate.",
+    )
+    ap.add_argument(
+        "--summary", default=None,
+        help="markdown report path (default: $GITHUB_STEP_SUMMARY if set)",
+    )
+    args = ap.parse_args(argv)
+
+    base = load_records(args.baseline)
+    fresh = load_records(args.fresh)
+    shared = {
+        n for n in set(base) & set(fresh)
+        if base[n]["us_per_call"] > 0 and fresh[n]["us_per_call"] > 0
+    }
+    if not shared:
+        print("compare: no shared timed records; nothing to gate", flush=True)
+        return 0
+
+    base_tot = table_totals(base, shared)
+    fresh_tot = table_totals(fresh, shared)
+    base_all = sum(base_tot.values())
+    fresh_all = sum(fresh_tot.values())
+    speed = fresh_all / max(base_all, 1e-9)
+
+    rows = []
+    failures = []
+    for table in sorted(base_tot, key=lambda t: (len(t), t)):
+        # leave-one-out normalization: the machine-speed ratio excludes
+        # the table under test, so a regression in a time-dominant table
+        # cannot inflate the ratio and mask itself
+        rest_base = base_all - base_tot[table]
+        rest_fresh = fresh_all - fresh_tot[table]
+        loo_speed = (
+            rest_fresh / rest_base if rest_base > 0 and rest_fresh > 0 else speed
+        )
+        b, f = base_tot[table] * loo_speed, fresh_tot[table]
+        ratio = f / max(b, 1e-9)
+        flag = ""
+        if ratio > 1 + args.threshold and f - b > args.min_delta_us:
+            flag = "**REGRESSION**"
+            failures.append(f"{table}: {ratio:.2f}x normalized baseline")
+        rows.append(
+            f"| {table} | {base_tot[table]:.0f} | {b:.0f} | {f:.0f} "
+            f"| {ratio:.2f}x | {flag} |"
+        )
+
+    md = [
+        "## Bench smoke: perf gate",
+        "",
+        f"machine-speed normalization: ×{speed:.2f} "
+        f"({len(shared)} shared records)",
+        "",
+        "| table | baseline µs | normalized µs | fresh µs | ratio | |",
+        "|---|---:|---:|---:|---:|---|",
+        *rows,
+        "",
+        "### Dense vs sparse jax path (table 10)",
+        "",
+        *sparse_delta_lines(fresh),
+        "",
+    ]
+    if failures:
+        md += ["### Failures", ""] + [f"- {f}" for f in failures]
+
+    report = "\n".join(md)
+    print(report, flush=True)
+    summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(report + "\n")
+
+    if failures:
+        print(
+            f"compare: {len(failures)} table(s) regressed beyond "
+            f"{args.threshold:.0%}", file=sys.stderr, flush=True,
+        )
+        return 1
+    print("compare: perf gate green", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,14 @@ Table IX  — multi-aggregate bundles (DESIGN.md §6): one fused
             multi-channel pass (COUNT+SUM+MIN+AVG via the logical-plan
             API) vs N separate single-aggregate join_agg runs, time and
             peak allocation, acyclic chain and cyclic triangle.
+Table X   — sparse-first jax path (DESIGN.md §7): dense einsum vs
+            sparse Pallas execution on a wide-domain chain SUM — time,
+            measured peak bytes, the planner's per-path estimates and
+            its auto choice.  Past the 2^24-element relation-tensor
+            cliff the dense path stops being runnable at all (it raises
+            MemoryError); the sparse path is what lets --scale paper
+            run the jax engine.  Results verified bit-identical to the
+            tensor engine at every scale.
 
 The 'PostgreSQL' column of the paper maps to the in-process traditional
 binary-join baseline; all engines are validated to agree on each run.
@@ -259,6 +267,99 @@ def _measured_chain_db(rng, n, jdom, gdom):
             },
         }
     )
+
+
+def table10_sparse(n: int, verify: bool) -> None:
+    """Dense-vs-sparse jax execution (see module docstring, Table X).
+
+    Join domains scale with n (jdom = n/5), so the per-relation dense
+    tensor is ~(n/5)² f32 elements: tiny/small stay under the 2^24
+    promotion cliff (both paths run and are measured against each
+    other), while medium and paper cross it — auto picks sparse, the
+    dense measurement is skipped (its relation tensors alone would
+    dwarf the whole sparse run) and only the planner's dense estimate
+    is reported."""
+    import numpy as np
+
+    from repro.aggregates.semiring import Sum
+    from repro.core.jax_engine import choose_jax_path, execute_jax
+    from repro.core.operator import peak_message_bytes
+    from repro.core.prepare import prepare
+    from repro.core.query import JoinAggQuery
+    from repro.core.tensor_engine import execute_tensor
+
+    from repro.core.jax_engine import DENSE_PROMOTE_ELEMS
+
+    rng = np.random.default_rng(23)
+    jdom, gdom = max(4, n // 5), max(2, n // 50)
+    db = _measured_chain_db(rng, n, jdom, gdom)
+    q = JoinAggQuery(
+        ("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")), Sum("R2", "m")
+    )
+    prep = prepare(q, db)
+    choice = choose_jax_path(prep)
+    emit(
+        "table10,CHAIN,auto_choice", 0.0,
+        f"path={choice.path};est_dense_mb={choice.dense_peak / 1e6:.2f};"
+        f"est_sparse_mb={choice.sparse_peak / 1e6:.2f};"
+        f"dense_over_sparse={choice.dense_peak / max(choice.sparse_peak, 1):.1f}x",
+    )
+
+    execute_jax(q, db, prep=prep, mode="sparse")  # warmup: jax init + jit
+    (res_s, mem_s), t_s = timed(
+        peak_memory, execute_jax, q, db, prep=prep, mode="sparse"
+    )
+    emit(
+        "table10,CHAIN,jax_sparse", t_s,
+        f"groups={len(res_s)};peak_mb={mem_s / 1e6:.2f}",
+    )
+    # Bit-identity vs the exact f64 engine whenever its oracle run is
+    # affordable (it is at tiny→medium; at paper scale the tensor
+    # engine's own peak message is multi-GB, the exact thing only the
+    # sparse path avoids — skipping there is the point of the table).
+    # Deliberately independent of the --no-verify flag: exact equality
+    # is this table's claim, and check_agree's 1e-6 tolerance would
+    # weaken it — hence the explicit raise (assert would vanish under
+    # `python -O`).
+    if peak_message_bytes(prep) <= 1 << 30:
+        want = execute_tensor(q, db, prep=prep)
+        if res_s != want:
+            raise AssertionError(
+                "sparse jax result not bit-identical to tensor engine"
+            )
+    else:
+        emit(
+            "table10,CHAIN,tensor_verify", 0.0,
+            "skipped=tensor_peak_exceeds_1GiB",
+        )
+
+    max_elems = max(
+        int(np.prod([prep.dicts[a].size for a in er.attrs]))
+        for er in prep.encoded.values()
+    )
+    if max_elems > DENSE_PROMOTE_ELEMS:
+        # past the cliff the dense relation tensors alone dwarf the whole
+        # sparse run; don't burn the bench budget materializing them
+        emit(
+            "table10,CHAIN,jax_dense", 0.0,
+            f"skipped=dense_cliff;max_relation_elems={max_elems}",
+        )
+        return
+    try:
+        execute_jax(q, db, prep=prep, mode="dense")  # warmup: trace + compile
+        (res_d, mem_d), t_d = timed(
+            peak_memory, execute_jax, q, db, prep=prep, mode="dense"
+        )
+    except MemoryError as e:
+        emit("table10,CHAIN,jax_dense", 0.0, f"skipped=dense_cliff:{e}")
+        return
+    emit(
+        "table10,CHAIN,jax_dense", t_d,
+        f"groups={len(res_d)};peak_mb={mem_d / 1e6:.2f};"
+        f"sparse_peak_ratio={mem_s / max(mem_d, 1):.3f}",
+    )
+    if verify:
+        check_agree(res_s, res_d, "table10:dense")
 
 
 def table7_cyclic(n: int, verify: bool) -> None:

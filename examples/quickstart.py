@@ -60,6 +60,24 @@ print()
 print(query.plan(db).explain())
 print()
 
+# The jax engine is sparse-first: it picks the Pallas/CSR sparse path or
+# the dense einsum per plan (see the "jax path:" line of explain()).  A
+# memory_budget (or .stream) forces the sparse path through the planner:
+#
+#     query.engine("jax").memory_budget(64 << 10).plan(db)
+#
+# and repro.core.jax_engine.execute_jax(q, db, mode="sparse"|"dense")
+# forces it for a single aggregate outside the planner.
+sparse_plan = query.engine("jax").memory_budget(64 << 10).plan(db)
+sparse_res = sparse_plan.execute()
+assert [r for r in sparse_plan.explain().splitlines() if "jax path" in r]
+print(
+    f"sparse jax path (forced via memory_budget): "
+    f"{sparse_res.num_rows} groups, same result: "
+    f"{sparse_res.to_dict('count') == results['jax'].to_dict('count')}"
+)
+print()
+
 t0 = time.perf_counter()
 want = oracle_multiagg(
     ("R1", "R2", "R3", "R4"),

@@ -28,6 +28,7 @@ from repro.core.prepare import Prepared
 from repro.core.tensor_engine import (
     ChannelTensorEngine,
     _restrict,
+    channel_weight_matrices,
     minmax_arrays,
 )
 
@@ -80,28 +81,24 @@ class Engine(Protocol):
         channels: tuple[Channel, ...],
         minmax: tuple[MinMaxRequest, ...],
         stream: tuple[str, int] | None = None,
+        memory_budget: int | None = None,
     ) -> list[EngineOutput]:
-        """Contract all channels in one pass; one output per stream tile."""
+        """Contract all channels in one pass; one output per stream tile.
+
+        ``memory_budget`` is advisory — engines with an internal physical
+        choice (the jax engine's dense-vs-sparse path) use it; others may
+        ignore it (the planner already resolved ``stream`` from it)."""
         ...
 
 
 def channel_weight_overrides(
     prep: Prepared, encoded, channels: tuple[Channel, ...]
 ) -> dict[str, np.ndarray]:
-    """Per-relation (n, k) weight matrices for the measure relations:
-    column c carries the ``sum`` payload where channel c measures that
-    relation, its multiplicity everywhere else."""
-    over: dict[str, np.ndarray] = {}
-    for rel in {c.measure[0] for c in channels if c.kind == "sum"}:
-        er = encoded[rel]
-        cols = [
-            er.payloads["sum"].astype(np.float64)
-            if ch.kind == "sum" and ch.measure[0] == rel
-            else er.count.astype(np.float64)
-            for ch in channels
-        ]
-        over[rel] = np.stack(cols, axis=1)
-    return over
+    """Per-relation (n, k) weight matrices for the measure relations —
+    thin adapter over :func:`~repro.core.tensor_engine.
+    channel_weight_matrices`, the single source of the layout."""
+    cm = tuple(c.measure[0] if c.kind == "sum" else None for c in channels)
+    return channel_weight_matrices(encoded, cm)
 
 
 def _shared_minmax(
@@ -152,7 +149,7 @@ class TensorChannelEngine:
     name = "tensor"
     supports_streaming = True
 
-    def run(self, prep, channels, minmax, stream=None):
+    def run(self, prep, channels, minmax, stream=None, memory_budget=None):
         if stream is None:
             return [self._run_once(prep, channels, minmax, prep.encoded, None, None)]
         attr, tile = stream
@@ -179,22 +176,56 @@ class TensorChannelEngine:
 
 
 class JaxChannelEngine:
-    """Jitted einsum multi-channel contraction (f32, exact to 2**24 per
-    partial product); MIN/MAX ride on the shared numpy reachability
-    kernel, like every other backend."""
+    """Sparse-first jax backend (f32, exact to 2**24 per partial product).
+
+    :func:`~repro.core.jax_engine.choose_jax_path` estimates dense-vs-
+    sparse peak bytes per node: the sparse
+    :class:`~repro.core.jax_engine.SparseProgram` (Pallas kernel hops
+    over grouped-CSR relations, group-axis stream tiles, MIN/MAX on the
+    semiring kernels) runs whenever the dense einsum program would cross
+    its memory cliff or a stream is requested; otherwise the jitted
+    dense einsum contraction runs, with MIN/MAX riding on the shared
+    numpy reachability kernel."""
 
     name = "jax"
-    supports_streaming = False
+    supports_streaming = True
 
-    def run(self, prep, channels, minmax, stream=None):
-        from repro.core.jax_engine import execute_jax_channels
+    def run(self, prep, channels, minmax, stream=None, memory_budget=None):
+        from repro.core.jax_engine import (
+            build_sparse_program,
+            choose_jax_path,
+            execute_jax_channels,
+        )
 
-        assert stream is None, "validated by the planner"
         cm = tuple(ch.measure[0] if ch.kind == "sum" else None for ch in channels)
-        arr = execute_jax_channels(prep, cm)  # (k, *group_dims)
-        arr = np.moveaxis(arr.astype(np.float64), 0, -1)
-        mm = _shared_minmax(prep, prep.encoded, None, minmax)
-        return [sparsify(prep, channels, arr, mm, None)]
+        choice = choose_jax_path(
+            prep, k=len(channels), memory_budget=memory_budget, stream=stream,
+            measured=cm,
+        )
+        if choice.path == "dense":
+            arr = execute_jax_channels(prep, cm)  # (k, *group_dims)
+            arr = np.moveaxis(arr.astype(np.float64), 0, -1)
+            mm = _shared_minmax(prep, prep.encoded, None, minmax)
+            return [sparsify(prep, channels, arr, mm, None)]
+        prog = build_sparse_program(prep, cm)
+        if stream is None:
+            tiles = [(None, None, None)]
+        else:
+            tiles = prog.run_stream(*stream)
+        outs = []
+        for enc, domains, offsets in tiles:
+            views: dict = {}  # share per-tile CSR sorts across the passes
+            arr = prog.run_channels(enc, domains, view_cache=views)
+            mm = {
+                req: prog.run_minmax(
+                    req.kind, req.measure[0], enc, domains, view_cache=views
+                )
+                for req in minmax
+            }
+            outs.append(
+                sparsify(prep, channels, arr.astype(np.float64), mm, offsets)
+            )
+        return outs
 
 
 class RefChannelEngine:
@@ -204,7 +235,7 @@ class RefChannelEngine:
     name = "ref"
     supports_streaming = False
 
-    def run(self, prep, channels, minmax, stream=None):
+    def run(self, prep, channels, minmax, stream=None, memory_budget=None):
         from repro.core.ref_engine import execute_ref_channels
 
         assert stream is None, "validated by the planner"

@@ -176,8 +176,12 @@ class Plan:
     def execute(self) -> AggResult:
         """Run every named aggregate in a single contraction pass."""
         self._require_physical()
+        kwargs = {}
+        if _accepts_memory_budget(self.engine):
+            kwargs["memory_budget"] = self.memory_budget
         outputs = self.engine.run(
-            self.prep, self.channels, self.minmax, self._resolved_stream()
+            self.prep, self.channels, self.minmax, self._resolved_stream(),
+            **kwargs,
         )
         return _assemble(self, outputs)
 
@@ -251,6 +255,8 @@ class Plan:
                 f"(memory budget "
                 f"{_fmt_bytes(self.memory_budget or DEFAULT_MEMORY_BUDGET)})"
             )
+        if self.engine.name == "jax":
+            lines.extend(self._explain_jax_path(stream))
         lines.append(
             f"aggregates ({len(self.channels)} semiring channel(s), "
             f"{len(self.minmax)} min/max request(s), one pass):"
@@ -272,6 +278,33 @@ class Plan:
             lines.append(f"  folded: {folds}")
         return "\n".join(lines)
 
+    def _explain_jax_path(self, stream) -> list[str]:
+        """Dense-vs-sparse choice + per-node byte estimates (jax engine)."""
+        from repro.core.jax_engine import choose_jax_path
+
+        choice = choose_jax_path(
+            self.prep,
+            k=max(len(self.channels), 1),
+            memory_budget=self.memory_budget,
+            stream=stream,
+            measured=tuple(
+                ch.measure[0]
+                for ch in self.channels
+                if ch.kind == "sum" and ch.measure
+            ),
+        )
+        lines = [
+            f"jax path: {choice.path} — {choice.reason}; "
+            f"est dense peak {_fmt_bytes(choice.dense_peak)} "
+            f"vs sparse peak {_fmt_bytes(choice.sparse_peak)}"
+        ]
+        for rel in choice.dense_node_bytes:
+            lines.append(
+                f"  {rel}: dense {_fmt_bytes(choice.dense_node_bytes[rel])} "
+                f"/ sparse {_fmt_bytes(choice.sparse_node_bytes[rel])}"
+            )
+        return lines
+
     def __repr__(self) -> str:
         kind = "ghd" if self.cyclic else "acyclic"
         return (
@@ -279,6 +312,21 @@ class Plan:
             f"root={self.prep.decomposition.root}, "
             f"aggs={[n for n, _ in self.aggs]})"
         )
+
+
+def _accepts_memory_budget(engine: Engine) -> bool:
+    """Engines registered against the pre-sparse 4-arg ``run`` protocol
+    (no ``memory_budget``) keep working: the keyword is only passed when
+    the signature takes it (or ``**kwargs``)."""
+    import inspect
+
+    try:
+        params = inspect.signature(engine.run).parameters
+    except (TypeError, ValueError):  # C callables etc.: assume current
+        return True
+    return "memory_budget" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
 
 
 def _fmt_bytes(n: int) -> str:
@@ -365,7 +413,8 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         raise UnsupportedPlanOption(
             f"engine {engine.name!r} does not support the "
             f"stream/memory_budget options (only streaming-capable "
-            f"engines do); drop the option or use engine='tensor'"
+            f"engines do); drop the option or use a streaming-capable "
+            f"engine ('tensor', 'jax')"
         )
 
     group_display = _display_names(spec.group_attrs)

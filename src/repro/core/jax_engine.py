@@ -1,33 +1,49 @@
 """JAX lowering of the JOIN-AGG contraction plan.
 
-Two modes:
+Two physical paths (DESIGN.md §2, §7):
 
 * ``dense``  — every relation becomes a dense multiplicity tensor over its
   relevant attrs; the decomposition-tree contraction lowers to one jitted
   ``jnp.einsum`` program (MXU path; shardable with NamedSharding — this is
-  what the multi-pod dry-run lowers).
-* ``kernels`` — 2-attr relations stay in COO form and each tree hop runs
-  the Pallas ``coo_spmm`` kernel (VMEM-blocked one-hot matmuls); the final
-  group reduction uses the Pallas ``segment_sum``.  Falls back to dense
-  contraction for >2-attr relations.
+  what the multi-pod dry-run lowers).  Fast at small domains, but the
+  per-relation ``Π|dom(attrs)|`` tensors are the exact intermediate
+  blowup JOIN-AGG exists to avoid.
+* ``sparse`` — relations stay in grouped-CSR coordinate form
+  (:class:`~repro.core.prepare.CSRView`) and every decomposition-tree hop
+  runs on the Pallas kernels: ``coo_spmm`` for single-child hops,
+  ``segment_sum`` for leaf/multi-child hops (per-edge products of child
+  message rows), ``segment_reduce`` for MIN/MAX semiring hops.  No dense
+  relation tensor is ever built; peak memory is the largest *message*,
+  and group-axis row tiles (``stream``) bound even that.
+  (``mode="kernels"`` is the legacy name for this path; it used to cover
+  only chain-COUNT plans and silently computed COUNT for SUM queries.)
 
-Counts are exact in f32 up to 2^24 per partial product; the ops guard
+``mode="auto"`` picks per plan via :func:`choose_jax_path`.  Counts are
+exact in f32 up to 2^24 per partial product on both paths; the ops guard
 against silent overflow by checking the f64 numpy result in tests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.prepare import Prepared, prepare
+from repro.core.prepare import Prepared, csr_restrict, grouped_csr, prepare
 from repro.core.query import JoinAggQuery
+from repro.core.tensor_engine import (
+    ChannelTensorEngine,
+    TensorEngine,
+    channel_weight_matrices,
+)
 from repro.relational.relation import Database
 
 MAX_DENSE_ELEMS = 1 << 26
+# a single relation tensor beyond this many elements pushes the dense
+# einsum path over its memory cliff; auto mode switches to sparse
+DENSE_PROMOTE_ELEMS = 1 << 24
 
 
 def _axis_letters(prep: Prepared) -> dict[str, str]:
@@ -152,19 +168,42 @@ def execute_jax(
     query: JoinAggQuery,
     db: Database,
     prep: Prepared | None = None,
-    mode: str = "dense",
+    mode: str = "auto",
     interpret: bool | None = None,
+    memory_budget: int | None = None,
 ) -> dict[tuple, float]:
+    """Single-aggregate jax execution.
+
+    ``mode``: ``"auto"`` (cost-based :func:`choose_jax_path`), ``"dense"``
+    (einsum; COUNT/SUM only), or ``"sparse"`` (Pallas kernels over CSR
+    relations; COUNT/SUM/MIN/MAX).  ``"kernels"`` is the legacy alias for
+    ``"sparse"`` — the old chain-only demo under that name silently
+    computed COUNT for SUM queries; the sparse program carries the
+    measure payload properly.
+    """
     if prep is None:
         prep = prepare(query, db)
     query = prep.query  # fold may re-point the aggregate's measure relation
-    if query.agg.kind not in ("count", "sum"):
-        raise NotImplementedError("jax engine: COUNT/SUM (others on tensor engine)")
+    kind = query.agg.kind
+    if kind not in ("count", "sum", "min", "max"):
+        raise NotImplementedError(
+            "jax engine: COUNT/SUM/MIN/MAX (AVG assembles on the planner)"
+        )
+
+    if mode == "kernels":  # legacy name for the sparse path
+        mode = "sparse"
+    if mode == "auto":
+        if kind in ("min", "max"):
+            mode = "sparse"  # dense einsum has no (min, +) form
+        else:
+            mode = choose_jax_path(prep, memory_budget=memory_budget).path
 
     if mode == "dense":
+        if kind not in ("count", "sum"):
+            raise NotImplementedError("jax dense mode: COUNT/SUM only")
         prog = build_dense_program(prep)
         tensors = prog.input_arrays()
-        if query.agg.kind == "sum":
+        if kind == "sum":
             rel = query.agg.measure[0]
             er = prep.encoded[rel]
             dims = tuple(prep.dicts[a].size for a in er.attrs)
@@ -176,8 +215,25 @@ def execute_jax(
         arr = np.asarray(jitted(tensors))
         return _decode(prep, arr)
 
-    if mode == "kernels":
-        return _execute_kernels(query, prep, interpret)
+    if mode == "sparse":
+        measure = query.agg.measure[0] if kind == "sum" else None
+        prog = build_sparse_program(prep, (measure,), interpret=interpret)
+        if kind in ("count", "sum"):
+            return _decode(prep, prog.run_channels()[..., 0])
+        # MIN/MAX: reachability mask from the COUNT channel (zeros can
+        # be genuine MIN/MAX values, so they must be kept where joined;
+        # `prog` already is the single-COUNT-channel program here)
+        mask = prog.run_channels()[..., 0] > 0
+        arr = prog.run_minmax(kind, query.agg.measure[0])
+        out: dict[tuple, float] = {}
+        nz = np.nonzero(mask)
+        cols = [
+            prep.dicts[attr].decode(codes)
+            for (_, attr), codes in zip(prep.group_attrs, nz)
+        ]
+        for i, v in enumerate(arr[nz]):
+            out[tuple(c[i] for c in cols)] = float(v)
+        return out
     raise ValueError(mode)
 
 
@@ -273,49 +329,418 @@ def _jit_for(key, fn) -> Callable:
     return jitted
 
 
-def _execute_kernels(query, prep: Prepared, interpret) -> dict[tuple, float]:
-    """COO/Pallas execution: every 2-attr tree hop is a coo_spmm."""
-    from repro.kernels.ops import coo_spmm
+# ----------------------------------------------------------------------
+# sparse-first execution (DESIGN.md §7)
+# ----------------------------------------------------------------------
 
-    deco = prep.decomposition
-    canonical = [attr for _, attr in prep.group_attrs]
+# edge blocks are padded to the next multiple of this count so the jitted
+# kernels see a handful of static shapes instead of one per relation
+EDGE_BUCKET = 256
+# the Pallas kernels index segments/rows in int32
+_INT32_LIMIT = 2**31
 
-    def message(rel: str, parent: str | None):
-        er = prep.encoded[rel]
-        node = deco.nodes[rel]
-        if len(er.attrs) != 2 or len(node.children) > 1:
-            raise NotImplementedError(
-                "kernel mode covers chain/self-join plans (2-attr relations, "
-                "≤1 child); run dense/tensor mode otherwise"
-            )
-        up = (
-            sorted(set(er.attrs) & set(prep.encoded[parent].attrs))
-            if parent else []
+
+def _pad_edges(keys: np.ndarray, vals: np.ndarray, idx: np.ndarray | None):
+    """Pad an edge block to the bucket size: key -1 rows are dropped by
+    the kernels, value rows are zero."""
+    pad = -len(keys) % EDGE_BUCKET
+    if pad == 0:
+        return keys, vals, idx
+    keys = np.concatenate([keys, np.full(pad, -1, np.int64)])
+    vals = np.concatenate(
+        [vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)]
+    )
+    if idx is not None:
+        idx = np.concatenate([idx, np.zeros(pad, np.int64)])
+    return keys, vals, idx
+
+
+def _use_ref_kernels(interpret: bool | None) -> bool:
+    """``interpret=None`` (auto) on a CPU host lowers the sparse hops to
+    the pure-jnp reference kernels: the Pallas interpreter executes the
+    kernel body per grid cell in Python — a validation device, orders of
+    magnitude too slow to benchmark — while the XLA segment ops are the
+    fastest CPU lowering of the same contraction.  On TPU backends (or
+    with an explicit ``interpret`` flag) the Pallas kernels run."""
+    return interpret is None and jax.default_backend() == "cpu"
+
+
+# the ref spmm's per-edge gather materializes (edges × width); chunk the
+# edge axis so the intermediate stays within this bound (the Pallas
+# kernel streams the same product through VMEM blocks instead)
+_REF_GATHER_BYTES = 64 << 20
+
+
+def _ref_spmm_chunked(keys, idx, vals, flat, knum) -> np.ndarray:
+    from repro.kernels import ref
+
+    n, width = len(keys), flat.shape[1]
+    chunk = max(1024, _REF_GATHER_BYTES // max(4 * width, 1))
+    dense = jnp.asarray(flat)
+    out = None
+    for lo in range(0, n, chunk):
+        sl = slice(lo, lo + chunk)
+        part = ref.coo_spmm_ref(
+            jnp.asarray(keys[sl], jnp.int32), jnp.asarray(idx[sl], jnp.int32),
+            jnp.asarray(vals[sl]), dense, knum,
         )
-        own_g = prep.schema.group_of.get(rel)
-        # row axis = the attr we keep (up attr, or root group attr)
-        keep = up[0] if up else own_g
-        other = [a for a in er.attrs if a != keep][0]
-        ki, oi = er.attrs.index(keep), er.attrs.index(other)
-        rows = jnp.asarray(er.codes[:, ki])
-        cols = jnp.asarray(er.codes[:, oi])
-        vals = jnp.asarray(er.count, dtype=jnp.float32)
-        m = prep.dicts[keep].size
-        if not node.children:
-            # leaf: dense message over (keep, other=group axis) via spmm
-            # against identity — equivalently scatter; use spmm with I.
-            k = prep.dicts[other].size
-            eye = jnp.eye(k, dtype=jnp.float32)
-            return keep, other, coo_spmm(rows, cols, vals, eye, m, interpret=interpret)
-        child = node.children[0]
-        ck, cg, cmsg = message(child, rel)
-        assert ck == other, (ck, other)
-        return keep, cg, coo_spmm(rows, cols, vals, cmsg, m, interpret=interpret)
+        out = part if out is None else out + part
+    return np.asarray(out, np.float32)
 
-    k, g, arr = message(deco.root, None)
-    arr = np.asarray(arr)
-    attrs_order = [k, g]
-    perm = [attrs_order.index(a) for a in canonical]
-    if perm != [0, 1]:
-        arr = arr.T
-    return _decode(prep, arr)
+
+class _CsrHopMixin:
+    """Feed every decomposition-tree hop its relation in grouped-CSR
+    order: edges sorted by the hop's raveled output key (up attrs + own
+    group attr), so each output row's edges form one contiguous block.
+    Relations of any arity flatten this way — the kernels only ever see
+    one row-key axis and one column-index axis."""
+
+    interpret: bool | None = None
+    # tile-local CSR views, shared across the engines of one stream tile
+    # (channel pass + one per MinMaxRequest) so each relation sorts once
+    view_cache: dict | None = None
+
+    def _hop_key_attrs(self, rel: str, parent: str | None) -> tuple[str, ...]:
+        er = self.encoded[rel]
+        own_g = self.prep.schema.group_of.get(rel)
+        up: tuple[str, ...] = ()
+        if parent is not None:
+            up = tuple(sorted(set(er.attrs) & set(self.encoded[parent].attrs)))
+        return up + ((own_g,) if own_g else ())
+
+    def message(self, rel: str, parent: str | None):
+        child_msgs = {
+            child: self.message(child, rel)
+            for child in self.deco.nodes[rel].children
+        }
+        er = self.encoded[rel]
+        key_attrs = self._hop_key_attrs(rel, parent)
+        if er is self.prep.encoded.get(rel):
+            view = self.prep.csr_view(rel, key_attrs)
+        else:  # stream tile: build a tile-local view (restricted domains)
+            cache = self.view_cache
+            view = None if cache is None else cache.get((rel, key_attrs))
+            if view is None:
+                view = grouped_csr(er, key_attrs, self._dims(key_attrs))
+                if cache is not None:
+                    cache[(rel, key_attrs)] = view
+        return self.contract_rows(
+            rel,
+            parent,
+            er.codes[view.order],
+            self._weights(rel)[view.order],
+            child_msgs,
+        )
+
+
+class _KernelChannelEngine(_CsrHopMixin, ChannelTensorEngine):
+    """k-channel contraction whose gather-product-scatter hot loop runs
+    on the Pallas kernels (f32):
+
+    * single-child hop, channel-uniform weights → ``coo_spmm`` with the
+      child message as the dense operand; the ``(k,)``-channel axis rides
+      the operand's column dimension (``(rows, width·k)``).
+    * leaf / multi-child / measure-weighted hop → the per-edge
+      channel-diagonal product of gathered child message rows is formed
+      host-side and reduced with ``segment_sum``.
+    """
+
+    def __init__(self, *args, interpret: bool | None = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.interpret = interpret
+
+    def _contract_block(self, weights, gathers, keys, knum):
+        from repro.kernels import ref
+        from repro.kernels.ops import coo_spmm, segment_sum
+
+        n = len(weights)
+        if n == 0 or knum >= _INT32_LIMIT:
+            out = super()._contract_block(weights, gathers, keys, knum)
+            return out.astype(np.float32)
+        use_ref = _use_ref_kernels(self.interpret)
+        w32 = np.asarray(weights, dtype=np.float32)  # (n, k)
+        uniform = self.k == 1 or bool((w32 == w32[:, :1]).all())
+        if len(gathers) == 1 and uniform:
+            m2, idx = gathers[0]  # m2 (rows, width, k)
+            rows, width = m2.shape[0], m2.shape[1]
+            if rows < _INT32_LIMIT:
+                flat = np.ascontiguousarray(m2, dtype=np.float32).reshape(
+                    rows, width * self.k
+                )
+                if use_ref:
+                    out = _ref_spmm_chunked(keys, idx, w32[:, 0], flat, knum)
+                else:
+                    kk, vv, ii = _pad_edges(keys, w32[:, 0], idx)
+                    out = coo_spmm(
+                        jnp.asarray(kk), jnp.asarray(ii), jnp.asarray(vv),
+                        jnp.asarray(flat), num_rows=knum,
+                        interpret=self.interpret,
+                    )
+                return np.asarray(out, np.float32).reshape(knum, width, self.k)
+        # general hop: row-aligned product of gathered child rows, then a
+        # device-side segment reduction into the CSR row keys; the edge
+        # axis is chunked so the per-edge product temp stays bounded by
+        # _REF_GATHER_BYTES instead of growing with the relation
+        width = 1
+        g32 = []
+        for m2, idx in gathers:
+            width *= m2.shape[1]
+            g32.append((np.asarray(m2, np.float32), idx))
+        chunk = max(1024, _REF_GATHER_BYTES // max(4 * width * self.k, 1))
+        out = np.zeros((knum, width, self.k), np.float32)
+        for lo in range(0, n, chunk):
+            sl = slice(lo, lo + chunk)
+            vals = w32[sl].reshape(-1, 1, self.k)
+            for m2, idx in g32:
+                rows = m2[idx[sl]]  # (c, Wc, k)
+                vals = (vals[:, :, None, :] * rows[:, None, :, :]).reshape(
+                    vals.shape[0], -1, self.k
+                )
+            flat = vals.reshape(vals.shape[0], width * self.k)
+            if use_ref:
+                part = ref.segment_sum_ref(
+                    jnp.asarray(flat), jnp.asarray(keys[sl], jnp.int32), knum
+                )
+            else:
+                kk, vv, _ = _pad_edges(keys[sl], flat, None)
+                part = segment_sum(
+                    jnp.asarray(vv), jnp.asarray(kk), num_segments=knum,
+                    interpret=self.interpret,
+                )
+            out += np.asarray(part, np.float32).reshape(knum, width, self.k)
+        return out
+
+
+class _MinMaxKernelEngine(_CsrHopMixin, TensorEngine):
+    """(min, +) / (max, +) semiring message passing over the tree: the
+    measure relation contributes its per-edge payload, every other
+    relation contributes 0, and each hop reduces the per-edge candidate
+    sums into their row keys with the Pallas ``segment_reduce`` kernel.
+    Unreached entries hold the identity (±inf) until :meth:`run` masks
+    them.  Min/max ignore multiplicities, so no re-rooting at the
+    measure relation is needed (unlike the reachability kernel)."""
+
+    def __init__(
+        self, prep, kind: str, rel_m: str, *,
+        interpret: bool | None = None, domains=None, encoded=None,
+    ):
+        super().__init__(prep, domains=domains, encoded=encoded)
+        self.kind = kind
+        self.rel_m = rel_m
+        self.interpret = interpret
+        self.ident = np.inf if kind == "min" else -np.inf
+
+    def _weights(self, rel):
+        er = self.encoded[rel]
+        if rel == self.rel_m:
+            return er.payloads[self.kind].astype(np.float64)
+        return np.zeros(er.num_rows)
+
+    def _contract_block(self, weights, gathers, keys, knum):
+        from repro.kernels import ref
+        from repro.kernels.ops import segment_reduce
+
+        n = len(weights)
+        width = 1
+        g32 = []
+        for m2, idx in gathers:
+            width *= m2.shape[1]
+            g32.append((np.asarray(m2, np.float32), idx))
+        red = np.minimum if self.kind == "min" else np.maximum
+        out = np.full((knum, width), self.ident, np.float32)
+        if n == 0:
+            return out
+        w32 = np.asarray(weights, np.float32)
+        use_ref = _use_ref_kernels(self.interpret)
+        # edge axis chunked like the channel engine's general hop: the
+        # per-edge candidate temp stays bounded by _REF_GATHER_BYTES
+        chunk = max(1024, _REF_GATHER_BYTES // max(4 * width, 1))
+        for lo in range(0, n, chunk):
+            sl = slice(lo, lo + chunk)
+            vals = w32[sl].reshape(-1, 1)
+            for m2, idx in g32:
+                rows = m2[idx[sl]]  # (c, Wc)
+                vals = (vals[:, :, None] + rows[:, None, :]).reshape(
+                    vals.shape[0], -1
+                )
+            if knum >= _INT32_LIMIT:
+                red.at(out, keys[sl], vals)
+                continue
+            if use_ref:
+                part = ref.segment_reduce_ref(
+                    jnp.asarray(vals), jnp.asarray(keys[sl], jnp.int32),
+                    knum, self.kind,
+                )
+            else:
+                kk, vv, _ = _pad_edges(keys[sl], vals, None)
+                part = segment_reduce(
+                    jnp.asarray(vv), jnp.asarray(kk), num_segments=knum,
+                    kind=self.kind, interpret=self.interpret,
+                )
+            out = red(out, np.asarray(part, np.float32))
+        return out
+
+
+@dataclass
+class SparseProgram:
+    """A compiled sparse execution of one ``Prepared`` (DESIGN.md §7).
+
+    Runs every acyclic decomposition tree — arbitrary relation arity
+    (grouped-CSR flattening), multi-child nodes (row-aligned products of
+    child messages), GHD bag outputs as CSR inputs — as Pallas kernel
+    hops, never building a dense relation tensor.  ``channel_measures``
+    mirrors :func:`execute_jax_channels`: entry ``c`` names the relation
+    whose ``sum`` payload rides channel ``c`` (None = COUNT).
+
+    Memoization: grouped-CSR views cache on the ``Prepared``
+    (:meth:`~repro.core.prepare.Prepared.csr_view`), and the Pallas
+    kernels are jitted with static block shapes (edge blocks padded to
+    ``EDGE_BUCKET`` multiples), so repeated runs — stream tiles,
+    refreshes over the same plan — reuse both the sorted edge blocks
+    and the compiled kernels; there is no per-program compiled artifact
+    beyond those two caches.
+    """
+
+    prep: Prepared
+    channel_measures: tuple[str | None, ...]
+    interpret: bool | None = None
+
+    @property
+    def k(self) -> int:
+        return len(self.channel_measures)
+
+    def run_channels(
+        self, encoded=None, domains=None, view_cache: dict | None = None
+    ) -> np.ndarray:
+        """One leaves→root kernel pass; returns ``(*group_dims, k)`` f32."""
+        encoded = self.prep.encoded if encoded is None else encoded
+        eng = _KernelChannelEngine(
+            self.prep,
+            self.k,
+            channel_weight_matrices(encoded, self.channel_measures),
+            domains=domains,
+            encoded=encoded,
+            interpret=self.interpret,
+        )
+        eng.view_cache = view_cache
+        return eng.run()
+
+    def run_minmax(
+        self, kind: str, rel_m: str, encoded=None, domains=None,
+        view_cache: dict | None = None,
+    ) -> np.ndarray:
+        """MIN/MAX(rel_m) over canonical group axes; unreached groups
+        hold 0.0 — mask with a COUNT support before use."""
+        encoded = self.prep.encoded if encoded is None else encoded
+        eng = _MinMaxKernelEngine(
+            self.prep, kind, rel_m,
+            domains=domains, encoded=encoded, interpret=self.interpret,
+        )
+        eng.view_cache = view_cache
+        arr = eng.run()
+        return np.where(np.isfinite(arr), arr, 0.0)
+
+    def run_stream(self, attr: str, tile: int):
+        """Yield ``(encoded, domains, offsets)`` per group-axis row tile;
+        relations are sliced through their grouped-CSR views, re-based to
+        the tile-local code range."""
+        total = self.prep.dicts[attr].size
+        for lo in range(0, total, tile):
+            hi = min(lo + tile, total)
+            enc = csr_restrict(self.prep, attr, lo, hi)
+            domains = {a: self.prep.dicts[a].size for a in self.prep.dicts}
+            domains[attr] = hi - lo
+            yield enc, domains, {attr: lo}
+
+
+def build_sparse_program(
+    prep: Prepared,
+    channel_measures: tuple[str | None, ...],
+    interpret: bool | None = None,
+) -> SparseProgram:
+    """Bind ``Prepared`` + channel spec into a :class:`SparseProgram`."""
+    return SparseProgram(prep, tuple(channel_measures), interpret)
+
+
+# ----------------------------------------------------------------------
+# cost-based dense-vs-sparse path choice
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class JaxPathChoice:
+    """Outcome of :func:`choose_jax_path`, rendered by ``Plan.explain()``."""
+
+    path: str  # "dense" | "sparse"
+    reason: str
+    dense_node_bytes: dict[str, int] = field(default_factory=dict)
+    sparse_node_bytes: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def dense_peak(self) -> int:
+        # the einsum program holds every relation tensor at once
+        return sum(self.dense_node_bytes.values())
+
+    @property
+    def sparse_peak(self) -> int:
+        return max(self.sparse_node_bytes.values(), default=0)
+
+
+def choose_jax_path(
+    prep: Prepared,
+    k: int = 1,
+    memory_budget: int | None = None,
+    stream: tuple[str, int] | None = None,
+    measured: tuple[str, ...] = (),
+) -> JaxPathChoice:
+    """Estimate per-node dense-vs-sparse peak bytes and pick the path.
+
+    Dense cost per node: the f32 relation tensor over its attr domains
+    (×k only for ``measured`` relations — the dense channel program only
+    k-stacks the measure tensors, everything else keeps one tensor) plus
+    the f32 einsum message (``node_message_bytes`` re-scaled; messages
+    carry the channel axis only when a measure channelizes the program).
+    Sparse cost per node: the CSR edge arrays plus the f32 k-channel
+    message.  Sparse wins when an explicit ``stream`` is set (dense
+    cannot tile), when any dense tensor crosses the 2^24 element cliff,
+    or when the dense program exceeds the memory budget.
+    """
+    from repro.core.operator import DEFAULT_MEMORY_BUDGET, node_message_bytes
+
+    budget = DEFAULT_MEMORY_BUDGET if memory_budget is None else memory_budget
+    measured_set = {m for m in measured if m}
+    dense_msg_k = k if measured_set else 1  # all-COUNT: one scalar einsum
+    msg = node_message_bytes(prep)  # 8 bytes/elem estimates
+    dense_nodes: dict[str, int] = {}
+    sparse_nodes: dict[str, int] = {}
+    over_cliff: str | None = None
+    for rel, er in prep.encoded.items():
+        elems = 1
+        for a in er.attrs:
+            elems *= prep.dicts[a].size
+        if elems > DENSE_PROMOTE_ELEMS and over_cliff is None:
+            over_cliff = rel
+        msg_f32 = msg[rel] // 2
+        tensor_k = k if rel in measured_set else 1
+        dense_nodes[rel] = 4 * elems * tensor_k + msg_f32 * dense_msg_k
+        edge_bytes = er.codes.nbytes + 4 * k * er.num_rows
+        sparse_nodes[rel] = edge_bytes + msg_f32 * k
+    choice = JaxPathChoice("dense", "", dense_nodes, sparse_nodes)
+    if stream is not None:
+        choice.path = "sparse"
+        choice.reason = f"stream tiles over {stream[0]!r} (dense cannot tile)"
+    elif over_cliff is not None:
+        choice.path = "sparse"
+        choice.reason = (
+            f"dense tensor for {over_cliff!r} exceeds 2^24 elements"
+        )
+    elif choice.dense_peak > budget:
+        choice.path = "sparse"
+        choice.reason = (
+            f"dense program needs {choice.dense_peak} B > budget {budget} B"
+        )
+    else:
+        choice.reason = (
+            f"dense program fits ({choice.dense_peak} B ≤ budget {budget} B)"
+        )
+    return choice

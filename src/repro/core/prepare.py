@@ -31,6 +31,43 @@ from repro.relational.relation import Database
 
 
 @dataclass
+class CSRView:
+    """Grouped-CSR view of an :class:`EncodedRelation` (DESIGN.md §7).
+
+    The relation's COO rows are sorted by a composite *row key* — the
+    ravel of the chosen key attributes — so every key's edges form one
+    contiguous block (classic CSR, with the indptr replaced by binary
+    search over the sorted key array: materializing ``indptr`` of length
+    ``Π|dom(key attrs)|`` would reintroduce exactly the dense blowup the
+    sparse path avoids).  Relations of any arity flatten this way: the
+    key side and the remaining attrs each ravel to a single axis, which
+    is what lets the 2-D Pallas kernels run arbitrary-arity hops.
+    """
+
+    attrs: tuple[str, ...]  # key attrs, in relation-attr order of ravel
+    keys: np.ndarray  # (n,) int64 raveled key per edge, ascending
+    order: np.ndarray  # (n,) permutation: sorted position -> original row
+    num_keys: int
+
+    def slice_range(self, lo: int, hi: int) -> slice:
+        """Edge slice (into the sorted order) whose keys lie in [lo, hi)."""
+        a = int(np.searchsorted(self.keys, lo, "left"))
+        b = int(np.searchsorted(self.keys, hi, "left"))
+        return slice(a, b)
+
+
+def grouped_csr(
+    er: EncodedRelation, key_attrs: tuple[str, ...], dims: tuple[int, ...]
+) -> CSRView:
+    """Build the grouped-CSR view of ``er`` keyed on ``key_attrs``."""
+    cols = [er.attrs.index(a) for a in key_attrs]
+    keys = _ravel(er.codes, cols, list(dims))
+    order = np.argsort(keys, kind="stable")
+    num = int(np.prod(dims, dtype=np.int64)) if dims else 1
+    return CSRView(tuple(key_attrs), keys[order], order, num)
+
+
+@dataclass
 class Prepared:
     query: JoinAggQuery
     schema: QuerySchema
@@ -53,6 +90,7 @@ class Prepared:
             self.fold_hosts = {}
         if self.measure_moves is None:
             self.measure_moves = {}
+        self._csr_cache: dict[tuple[str, tuple[str, ...]], CSRView] = {}
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:
@@ -60,6 +98,21 @@ class Prepared:
 
     def domain(self, attr: str) -> int:
         return self.dicts[attr].size
+
+    def csr_view(self, rel: str, key_attrs: tuple[str, ...]) -> CSRView:
+        """Memoized grouped-CSR view of an encoded relation (DESIGN.md §7).
+
+        Views are only valid for the prepared (immutable) encodings; the
+        streaming path builds tile-local views directly instead."""
+        key = (rel, tuple(key_attrs))
+        view = self._csr_cache.get(key)
+        if view is None:
+            er = self.encoded[rel]
+            dims = tuple(self.dicts[a].size for a in key_attrs)
+            view = self._csr_cache.setdefault(
+                key, grouped_csr(er, tuple(key_attrs), dims)
+            )
+        return view
 
 
 def _ravel(codes: np.ndarray, cols: list[int], dims: list[int]) -> np.ndarray:
@@ -69,6 +122,35 @@ def _ravel(codes: np.ndarray, cols: list[int], dims: list[int]) -> np.ndarray:
     return np.ravel_multi_index(
         tuple(codes[:, c] for c in cols), dims=tuple(dims)
     ).astype(np.int64)
+
+
+def csr_restrict(
+    prep: "Prepared", attr: str, lo: int, hi: int
+) -> dict[str, EncodedRelation]:
+    """Encoded relations with ``attr`` codes restricted to [lo, hi) and
+    re-based to the tile-local range — the sparse path's stream tiles.
+
+    Unlike the tensor engine's mask-based ``_restrict`` this slices each
+    relation through its cached grouped-CSR view: one binary search per
+    tile instead of a full COO scan, so a stream of T tiles costs one
+    sort + T·O(log n) instead of T·O(n)."""
+    enc: dict[str, EncodedRelation] = {}
+    for rel, er in prep.encoded.items():
+        if attr not in er.attrs:
+            enc[rel] = er
+            continue
+        view = prep.csr_view(rel, (attr,))
+        rows = view.order[view.slice_range(lo, hi)]
+        codes = er.codes[rows].copy()
+        codes[:, er.attrs.index(attr)] -= lo
+        enc[rel] = EncodedRelation(
+            er.name,
+            er.attrs,
+            codes,
+            er.count[rows],
+            {k: v[rows] for k, v in er.payloads.items()},
+        )
+    return enc
 
 
 def _fold_leaf_multipliers(

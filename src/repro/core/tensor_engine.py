@@ -267,6 +267,26 @@ class ChannelTensorEngine(TensorEngine):
         return _segment_sum(keys, vals, knum)
 
 
+def channel_weight_matrices(
+    encoded, channel_measures, dtype=np.float64
+) -> dict[str, np.ndarray]:
+    """Per-relation (n, k) weight matrices for the measure relations:
+    column c carries the ``sum`` payload where channel c measures that
+    relation, its multiplicity everywhere else.  ``channel_measures[c]``
+    names channel c's measure relation (None = COUNT).  Single source of
+    the measure-channel weight layout — the api engine registry and the
+    sparse jax path both build from it."""
+    over: dict[str, np.ndarray] = {}
+    for rel in {r for r in channel_measures if r is not None}:
+        er = encoded[rel]
+        cols = [
+            er.payloads["sum"] if m == rel else er.count
+            for m in channel_measures
+        ]
+        over[rel] = np.stack([np.asarray(c, dtype) for c in cols], axis=1)
+    return over
+
+
 def _decode_result(
     prep: Prepared, arr: np.ndarray, offsets: dict[str, int] | None = None
 ) -> dict[tuple, float]:

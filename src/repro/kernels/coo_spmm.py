@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _coo_spmm_kernel(rows_ref, cols_ref, vals_ref, dense_ref, out_ref, *,
-                     block_m: int, block_k: int):
+def _coo_spmm_kernel(
+    rows_ref, cols_ref, vals_ref, dense_ref, out_ref, *, block_m: int, block_k: int
+):
     mi = pl.program_id(0)
     ei = pl.program_id(1)
     ki = pl.program_id(2)

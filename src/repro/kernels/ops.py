@@ -4,7 +4,8 @@
 Python for validation) and False on real TPU backends.
 """
 from repro.kernels.coo_spmm import coo_spmm
+from repro.kernels.segment_reduce import segment_reduce
 from repro.kernels.segment_sum import segment_sum
 from repro.kernels.semiring_matmul import semiring_matmul
 
-__all__ = ["segment_sum", "coo_spmm", "semiring_matmul"]
+__all__ = ["segment_sum", "segment_reduce", "coo_spmm", "semiring_matmul"]

@@ -5,9 +5,20 @@ import jax
 import jax.numpy as jnp
 
 
-def segment_sum_ref(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+def segment_sum_ref(
+    data: jax.Array, segment_ids: jax.Array, num_segments: int
+) -> jax.Array:
     """out[s] = sum of data rows with segment_ids == s."""
     return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_reduce_ref(
+    data: jax.Array, segment_ids: jax.Array, num_segments: int, kind: str = "min"
+) -> jax.Array:
+    """out[s] = min/max of data rows with segment_ids == s (identity if none)."""
+    if kind == "min":
+        return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
 
 
 def coo_spmm_ref(
@@ -18,7 +29,9 @@ def coo_spmm_ref(
     return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
 
 
-def semiring_matmul_ref(a: jax.Array, b: jax.Array, semiring: str = "add_mul") -> jax.Array:
+def semiring_matmul_ref(
+    a: jax.Array, b: jax.Array, semiring: str = "add_mul"
+) -> jax.Array:
     """C[i,j] = ⊕_k a[i,k] ⊗ b[k,j] for the chosen semiring."""
     if semiring == "add_mul":
         return jnp.dot(a, b, preferred_element_type=jnp.float32)

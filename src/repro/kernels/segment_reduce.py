@@ -1,0 +1,111 @@
+"""Pallas TPU segment MIN/MAX reduction.
+
+The sparse execution path (DESIGN.md §7) runs MIN/MAX aggregates as
+(min, +) / (max, +) semiring message passing over the decomposition
+tree; each hop is "reduce candidate rows into their group-key buckets
+with min/max".  A TPU has no efficient scatter, so — exactly like
+``segment_sum`` — the lowering builds a one-hot selector per
+(segment-tile × row-tile) grid cell.  ``min``/``max`` have no MXU form,
+so instead of a dot product the kernel reuses the
+``semiring_matmul``-style k-slice loop: the selector becomes an
+identity-or-±inf matrix ``A`` and the cell computes
+``out[s, d] = reduce_r (A[s, r] + data[r, d])`` on the VPU.
+
+Grid: ``(num_segment_tiles, num_row_tiles)``; the output tile is
+revisited across the row axis and reduced in VMEM.  Rows with ids
+outside ``[0, num_segments)`` contribute the identity (they are how the
+wrapper pads).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_IDENT = {"min": jnp.inf, "max": -jnp.inf}
+
+
+def _segment_reduce_kernel(
+    ids_ref, data_ref, out_ref, *, block_s: int, kind: str, k_step: int
+):
+    si = pl.program_id(0)
+    rj = pl.program_id(1)
+    ident = _IDENT[kind]
+
+    @pl.when(rj == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    ids = ids_ref[...]  # (block_n,) int32 (global segment ids)
+    seg0 = si * block_s
+    # A[s, r] = 0 iff ids[r] == seg0 + s else ±inf  -> (block_s, block_n)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block_s, ids.shape[0]), 0)
+    sel = ids[None, :] - seg0 == iota
+    a = jnp.where(sel, 0.0, ident).astype(out_ref.dtype)
+    data = data_ref[...]
+    red = jnp.minimum if kind == "min" else jnp.maximum
+
+    def body(i, acc):
+        lo = i * k_step
+        a_sl = jax.lax.dynamic_slice_in_dim(a, lo, k_step, axis=1)
+        d_sl = jax.lax.dynamic_slice_in_dim(data, lo, k_step, axis=0)
+        cand = a_sl[:, :, None] + d_sl[None, :, :]
+        upd = jnp.min(cand, axis=1) if kind == "min" else jnp.max(cand, axis=1)
+        return red(acc, upd)
+
+    steps = ids.shape[0] // k_step
+    acc = jax.lax.fori_loop(0, steps, body, out_ref[...])
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "kind", "block_s", "block_n", "interpret"),
+)
+def segment_reduce(
+    data: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    kind: str = "min",
+    block_s: int = 128,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Reduce rows of ``data`` (n, d) into ``num_segments`` buckets with
+    min/max; empty buckets hold the identity (``+inf``/``-inf``).
+
+    ids outside [0, num_segments) are dropped, matching
+    ``segment_reduce_ref`` for in-range ids."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if kind not in _IDENT:
+        raise ValueError(f"unknown reduction {kind!r}")
+    n, d = data.shape
+    n_pad = -n % block_n
+    s_pad = -num_segments % block_s
+    if n_pad:
+        data = jnp.pad(data, ((0, n_pad), (0, 0)))
+        # padded rows get an out-of-range id -> contribute the identity
+        segment_ids = jnp.pad(segment_ids, (0, n_pad), constant_values=-1)
+    s_total = num_segments + s_pad
+    grid = (s_total // block_s, data.shape[0] // block_n)
+    # k_step must divide block_n exactly or the fori_loop drops the
+    # trailing rows of every block
+    k_step = math.gcd(block_n, 8)
+    out = pl.pallas_call(
+        functools.partial(
+            _segment_reduce_kernel, block_s=block_s, kind=kind, k_step=k_step
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda si, rj: (rj,)),
+            pl.BlockSpec((block_n, d), lambda si, rj: (rj, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, d), lambda si, rj: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_total, d), data.dtype),
+        interpret=interpret,
+    )(segment_ids.astype(jnp.int32), data)
+    return out[:num_segments]

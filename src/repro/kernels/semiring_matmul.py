@@ -12,6 +12,7 @@ Grid ``(m_tiles, n_tiles, k_tiles)``; C tile accumulates across k.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +74,10 @@ def semiring_matmul(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    pad_fill = 0.0 if semiring in ("add_mul", "or_and") else (
-        jnp.inf if semiring == "min_add" else -jnp.inf
+    pad_fill = (
+        0.0
+        if semiring in ("add_mul", "or_and")
+        else (jnp.inf if semiring == "min_add" else -jnp.inf)
     )
     m_pad, n_pad, k_pad = -m % block_m, -n % block_n, -k % block_k
     if m_pad or k_pad:
@@ -82,7 +85,9 @@ def semiring_matmul(
     if k_pad or n_pad:
         b = jnp.pad(b, ((0, k_pad), (0, n_pad)), constant_values=pad_fill)
     grid = (a.shape[0] // block_m, b.shape[1] // block_n, a.shape[1] // block_k)
-    k_step = min(8, block_k)
+    # k_step must divide block_k exactly or the fori_loop drops the
+    # trailing k-slices of every block
+    k_step = math.gcd(block_k, 8)
     out = pl.pallas_call(
         functools.partial(_semiring_matmul_kernel, semiring=semiring, k_step=k_step),
         grid=grid,

@@ -334,20 +334,29 @@ def test_where_pushdown_encodes_only_survivors():
 # ----------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("engine", ["jax", "ref"])
-def test_unsupported_options_raise(engine):
+def test_unsupported_options_raise():
     db = chain_db()
     q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
     with pytest.raises(UnsupportedPlanOption):
-        join_agg(q, db, engine=engine, stream=("g1", 2))
+        join_agg(q, db, engine="ref", stream=("g1", 2))
     with pytest.raises(UnsupportedPlanOption):
-        join_agg(q, db, engine=engine, memory_budget=1024)
+        join_agg(q, db, engine="ref", memory_budget=1024)
     with pytest.raises(UnsupportedPlanOption):
         (
-            Q.from_query(q).engine(engine).memory_budget(1024).plan(db)
+            Q.from_query(q).engine("ref").memory_budget(1024).plan(db)
         )
     # default budget on a non-streaming engine is fine (nothing explicit)
-    assert join_agg(q, db, engine=engine)
+    assert join_agg(q, db, engine="ref")
+
+
+def test_jax_stream_options_now_supported():
+    """The sparse path made the jax engine streaming-capable: stream and
+    memory_budget no longer raise and agree with the tensor result."""
+    db = chain_db()
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    full = join_agg(q, db)
+    assert join_agg(q, db, engine="jax", stream=("g1", 2)) == full
+    assert join_agg(q, db, engine="jax", memory_budget=1024) == full
 
 
 def test_shims_match_legacy_and_planner():
@@ -466,8 +475,28 @@ def test_unknown_engine_lists_registry():
         name = "custom-null"
         supports_streaming = False
 
-        def run(self, prep, channels, minmax, stream=None):
+        def run(self, prep, channels, minmax, stream=None, memory_budget=None):
             raise NotImplementedError
 
     register_engine(Custom())
     assert resolve_engine("custom-null").name == "custom-null"
+
+
+def test_legacy_engine_signature_still_executes():
+    """A user engine written against the pre-sparse 4-arg run() protocol
+    (no memory_budget kwarg) must keep executing — the planner only
+    passes the kwarg to engines whose signature accepts it."""
+    from repro.api.engines import TensorChannelEngine
+
+    class Legacy:
+        name = "legacy-tensor"
+        supports_streaming = False
+
+        def run(self, prep, channels, minmax, stream=None):
+            return TensorChannelEngine().run(prep, channels, minmax, stream)
+
+    register_engine(Legacy())
+    db = chain_db()
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    got = Q.from_query(q).engine("legacy-tensor").plan(db).execute()
+    assert got.to_dict() == join_agg(q, db)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import coo_spmm, segment_sum, semiring_matmul
+from repro.kernels.ops import coo_spmm, segment_reduce, segment_sum, semiring_matmul
 
 RNG = np.random.default_rng(1)
 
@@ -52,6 +52,52 @@ def test_semiring_matmul(semiring, m, k, n):
                           block_m=32, block_n=32, block_k=16, interpret=True)
     want = ref.semiring_matmul_ref(a, b, semiring)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["min", "max"])
+@pytest.mark.parametrize("n,d,s", [(100, 8, 16), (513, 128, 130), (1, 8, 3)])
+def test_segment_reduce(kind, n, d, s):
+    data = jnp.asarray(RNG.normal(size=(n, d)), dtype=jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, size=n), dtype=jnp.int32)
+    got = segment_reduce(
+        data, ids, num_segments=s, kind=kind, block_s=16, block_n=64,
+        interpret=True,
+    )
+    want = ref.segment_reduce_ref(data, ids, s, kind)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_reduce_block_not_multiple_of_kstep():
+    """Regression: block_n not divisible by the k-slice step used to drop
+    the trailing rows of every block (12 // 8 == 1 loop step)."""
+    data = jnp.asarray(RNG.normal(size=(24, 4)), dtype=jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, 6, size=24), dtype=jnp.int32)
+    got = segment_reduce(
+        data, ids, num_segments=6, kind="min", block_s=8, block_n=12,
+        interpret=True,
+    )
+    want = ref.segment_reduce_ref(data, ids, 6, "min")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_semiring_block_not_multiple_of_kstep():
+    """Same trailing-slice hazard in the semiring k-step loop."""
+    a = jnp.asarray(RNG.normal(size=(16, 12)), dtype=jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(12, 8)), dtype=jnp.float32)
+    got = semiring_matmul(a, b, semiring="min_add",
+                          block_m=8, block_n=8, block_k=12, interpret=True)
+    want = ref.semiring_matmul_ref(a, b, "min_add")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_segment_reduce_empty_bucket_identity():
+    """Buckets no row maps to hold the reduction identity (±inf)."""
+    data = jnp.asarray(RNG.normal(size=(4, 8)), dtype=jnp.float32)
+    ids = jnp.asarray([0, 0, 2, 2], dtype=jnp.int32)
+    lo = segment_reduce(data, ids, num_segments=4, kind="min", interpret=True)
+    hi = segment_reduce(data, ids, num_segments=4, kind="max", interpret=True)
+    assert np.all(np.asarray(lo)[1] == np.inf)
+    assert np.all(np.asarray(hi)[3] == -np.inf)
 
 
 def test_spmm_counts_exact_int_in_f32():

@@ -1,0 +1,135 @@
+"""Property tests (hypothesis): the sparse-first jax path equals the
+tensor-engine oracle on random acyclic and cyclic queries — every
+aggregate kind, single and channel-bundled, with memory budgets small
+enough to force ≥2 stream row tiles (DESIGN.md §7)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # many randomized examples; run via `-m slow`
+
+from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.api import Q
+from repro.core.jax_engine import execute_jax
+from repro.core.query import JoinAggQuery
+from repro.core.tensor_engine import execute_tensor
+from repro.relational.relation import Database
+
+SMALL = st.integers(min_value=2, max_value=5)
+
+
+def _aggs(measure: str):
+    return dict(
+        count=Count(),
+        total=Sum(measure),
+        lo=Min(measure),
+        hi=Max(measure),
+        mean=Avg(measure),
+    )
+
+
+@st.composite
+def acyclic_case(draw):
+    """Random star/chain mix: 3-chain plus an optional branch relation
+    hanging off the middle (multi-child node on the sparse path)."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n = draw(st.integers(5, 60))
+    gdom, jdom = draw(SMALL), draw(SMALL)
+    mapping = {
+        "R1": {"g1": rng.integers(0, gdom, n), "p0": rng.integers(0, jdom, n)},
+        "R2": {
+            "p0": rng.integers(0, jdom, n),
+            "p1": rng.integers(0, jdom, n),
+            "m": rng.integers(1, 16, n),
+        },
+        "R3": {"p1": rng.integers(0, jdom, n), "g2": rng.integers(0, gdom, n)},
+    }
+    rels = ["R1", "R2", "R3"]
+    if draw(st.booleans()):  # branch: R2 becomes a multi-child node
+        mapping["R2"]["p2"] = rng.integers(0, jdom, n)
+        mapping["R4"] = {
+            "p2": rng.integers(0, jdom, n),
+            "g3": rng.integers(0, gdom, n),
+        }
+        rels.append("R4")
+    db = Database.from_mapping(mapping)
+    group_by = [("R1", "g1"), ("R3", "g2")]
+    if "R4" in rels:
+        group_by.append(("R4", "g3"))
+    return db, tuple(rels), tuple(group_by), _aggs("R2.m")
+
+
+@st.composite
+def cyclic_case(draw):
+    """Random triangle query (GHD bags feed the sparse path as CSR)."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n = draw(st.integers(20, 80))
+    nodes = draw(st.integers(6, 14))
+    labels = draw(SMALL)
+    db = Database.from_mapping(
+        {
+            "E1": {
+                "a": rng.integers(0, nodes, n),
+                "b": rng.integers(0, nodes, n),
+                "w": rng.integers(1, 9, n),
+            },
+            "E2": {"b": rng.integers(0, nodes, n), "c": rng.integers(0, nodes, n)},
+            "E3": {"c": rng.integers(0, nodes, n), "a": rng.integers(0, nodes, n)},
+            "L": {"a": np.arange(nodes), "vlabel": rng.integers(0, labels, nodes)},
+        }
+    )
+    return db, ("E1", "E2", "E3", "L"), (("L", "vlabel"),), _aggs("E1.w")
+
+
+def _compare(case, budget):
+    """Sparse jax bundle (budget forces the sparse path — and, when tiny
+    enough relative to the plan's peak, ≥2 row tiles) vs tensor oracle."""
+    db, rels, group_by, aggs = case
+    base = Q.over(*rels).group_by(*group_by).agg(**aggs)
+    want = base.engine("tensor").plan(db).execute()
+    jplan = base.engine("jax").memory_budget(budget).plan(db)
+    got = jplan.execute()
+    assert got.group_tuples() == want.group_tuples()
+    for name in aggs:
+        assert got.to_dict(name) == want.to_dict(name), name
+
+
+@settings(max_examples=12, deadline=None)
+@given(acyclic_case(), st.sampled_from([64, 128, 1 << 20]))
+def test_sparse_bundle_equals_tensor_acyclic(case, budget):
+    _compare(case, budget)
+
+
+@settings(max_examples=8, deadline=None)
+@given(cyclic_case(), st.sampled_from([256, 1 << 20]))
+def test_sparse_bundle_equals_tensor_cyclic(case, budget):
+    _compare(case, budget)
+
+
+@settings(max_examples=12, deadline=None)
+@given(acyclic_case())
+def test_sparse_single_aggregates_equal_tensor(case):
+    """execute_jax(mode='sparse') per aggregate kind vs the exact numpy
+    engine (AVG assembles on the planner, so it is excluded here)."""
+    db, rels, group_by, aggs = case
+    for agg in aggs.values():
+        if agg.kind == "avg":
+            continue
+        q = JoinAggQuery(rels, group_by, agg)
+        got = execute_jax(q, db, mode="sparse", interpret=True)
+        assert got == execute_tensor(q, db), agg.kind
+
+
+@settings(max_examples=10, deadline=None)
+@given(acyclic_case(), st.integers(1, 3))
+def test_sparse_explicit_stream_tiles(case, tile):
+    """An explicit stream plan with ≥2 tiles never changes any column."""
+    db, rels, group_by, aggs = case
+    base = Q.over(*rels).group_by(*group_by).agg(**aggs)
+    want = base.engine("tensor").plan(db).execute()
+    got = base.engine("jax").stream("g1", tile).plan(db).execute()
+    assert got.group_tuples() == want.group_tuples()
+    for name in aggs:
+        assert got.to_dict(name) == want.to_dict(name), name
