@@ -16,9 +16,10 @@ ms jitter past 30% run-to-run).  The normalization makes the gate catch
 the suite — which is the signature of a real perf bug; a uniform
 machine-wide slowdown is invisible to it by design.
 
-It also renders a markdown report — the per-table comparison plus the
-table-10 dense-vs-sparse peak-bytes delta — into ``$GITHUB_STEP_SUMMARY``
-when set (or ``--summary PATH``), so every PR shows its bench trajectory.
+It also renders a markdown report — the per-table comparison, the
+table-10 dense-vs-sparse peak-bytes delta, and the table-11 per-device
+sharding peaks — into ``$GITHUB_STEP_SUMMARY`` when set (or
+``--summary PATH``), so every PR shows its bench trajectory.
 """
 from __future__ import annotations
 
@@ -88,6 +89,32 @@ def sparse_delta_lines(fresh: dict[str, dict]) -> list[str]:
         f"(dense/sparse estimate ratio "
         f"{derived_field(choice, 'dense_over_sparse')})"
     )
+    return lines
+
+
+def distributed_delta_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-11 per-device peak across shard counts as markdown rows."""
+    rows = [
+        (d, fresh.get(f"table11,STAR,shards_{d}")) for d in (1, 2, 4, 8)
+    ]
+    if all(rec is None for _, rec in rows):
+        return ["_no table-11 records in this run_"]
+    lines = [
+        "| shards | wall µs | per-device peak (MB) |",
+        "|---:|---:|---:|",
+    ]
+    for d, rec in rows:
+        if rec is None:
+            continue
+        lines.append(
+            f"| {d} | {rec['us_per_call']:.0f} | "
+            f"{derived_field(rec, 'per_device_peak_mb')} |"
+        )
+    ratio = derived_field(
+        fresh.get("table11,STAR,peak_reduction_1_to_8"), "ratio"
+    )
+    if ratio is not None:
+        lines.append(f"\nper-device peak reduction 1 → 8 shards: **{ratio}**")
     return lines
 
 
@@ -164,6 +191,10 @@ def main(argv: list[str] | None = None) -> int:
         "### Dense vs sparse jax path (table 10)",
         "",
         *sparse_delta_lines(fresh),
+        "",
+        "### Distributed-sparse sharding (table 11)",
+        "",
+        *distributed_delta_lines(fresh),
         "",
     ]
     if failures:

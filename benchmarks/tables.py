@@ -26,6 +26,15 @@ Table X   — sparse-first jax path (DESIGN.md §7): dense einsum vs
             MemoryError); the sparse path is what lets --scale paper
             run the jax engine.  Results verified bit-identical to the
             tensor engine at every scale.
+Table XI  — distributed-sparse path (DESIGN.md §8): the same sharded
+            program on 1/2/4/8 virtual CPU devices (subprocess — the
+            device count must precede jax init) — wall time and
+            *measured* per-device bytes (shard-local hop arrays + the
+            largest local message).  The root group attribute dominates
+            the working set by design, so per-device peak must shrink
+            near-linearly: the run asserts ≥3× reduction from 1 → 8
+            shards.  Results verified bit-identical to the tensor
+            engine when --no-verify is absent.
 
 The 'PostgreSQL' column of the paper maps to the in-process traditional
 binary-join baseline; all engines are validated to agree on each run.
@@ -360,6 +369,121 @@ def table10_sparse(n: int, verify: bool) -> None:
     )
     if verify:
         check_agree(res_s, res_d, "table10:dense")
+
+
+_TABLE11_SCRIPT = r"""
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.api import Count, Q, Sum
+from repro.core.distributed import build_distributed_program
+from repro.relational.relation import Database
+
+n, do_verify = int(sys.argv[1]), sys.argv[2] == "1"
+rng = np.random.default_rng(31)
+n23 = max(256, n // 10)
+pdom = max(4, n23 // 8)
+db = Database.from_mapping({
+    # the root relation dominates: one row per source draw over a dense
+    # source domain (the paper's per-source outer loop is what shards)
+    "R1": {"g1": rng.integers(0, n, n), "p": rng.integers(0, pdom, n)},
+    "R2": {
+        "p": rng.integers(0, pdom, n23),
+        "q": rng.integers(0, pdom, n23),
+        "m": rng.integers(1, 8, n23),
+    },
+    "R3": {"q": rng.integers(0, pdom, n23), "g2": rng.integers(0, 8, n23)},
+})
+q = (
+    Q.over("R1", "R2", "R3")
+    .group_by("R1.g1", "R3.g2")
+    .agg(c=Count(), total=Sum("R2.m"))
+)
+plan = q.engine("jax").plan(db)
+cm = tuple(
+    ch.measure[0] if ch.kind == "sum" else None for ch in plan.channels
+)
+rows = []
+for d in (1, 2, 4, 8):
+    prog = build_distributed_program(plan.prep, cm, d)
+    prog.run()  # warmup: device_put + shard_map trace + compile
+    t0 = time.perf_counter()
+    outs = prog.run()
+    wall = time.perf_counter() - t0
+    groups = int(sum((arr[..., 0] > 0).sum() for arr, _, _ in outs))
+    verified = None
+    if do_verify:
+        got = plan.execute(mesh=d)
+        want = q.engine("tensor").plan(db).execute()
+        verified = got.group_tuples() == want.group_tuples() and all(
+            got.to_dict(name) == want.to_dict(name) for name in ("c", "total")
+        )
+    rows.append({
+        "devices": d,
+        "wall_s": wall,
+        "per_device_bytes": prog.per_device_bytes(),
+        "groups": groups,
+        "verified": verified,
+    })
+print(json.dumps({"rows": rows}))
+"""
+
+
+def table11_distributed(n: int, verify: bool) -> None:
+    """Sharded sparse JOIN-AGG over 1/2/4/8 virtual devices (Table XI).
+
+    One subprocess (8 virtual CPU devices fixed before jax init) builds
+    the same star-chain plan on meshes of 1/2/4/8 shards and reports
+    wall time + measured per-device bytes; this side emits the records
+    and enforces the near-linear peak reduction the sharding exists for.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-c", _TABLE11_SCRIPT, str(n), "1" if verify else "0"],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"table11 subprocess failed:\n{res.stderr[-3000:]}"
+        )
+    rows = json.loads(res.stdout.strip().splitlines()[-1])["rows"]
+    by_dev = {}
+    for row in rows:
+        by_dev[row["devices"]] = row
+        emit(
+            f"table11,STAR,shards_{row['devices']}", row["wall_s"],
+            f"groups={row['groups']};"
+            f"per_device_peak_mb={row['per_device_bytes'] / 1e6:.3f}"
+            + ("" if row["verified"] is None else f";verified={row['verified']}"),
+        )
+        if verify and row["verified"] is not True:
+            raise AssertionError(
+                f"table11: sharded result on {row['devices']} device(s) "
+                "not bit-identical to the tensor engine"
+            )
+    ratio = by_dev[1]["per_device_bytes"] / max(by_dev[8]["per_device_bytes"], 1)
+    emit(
+        "table11,STAR,peak_reduction_1_to_8", 0.0,
+        f"ratio={ratio:.2f}x",
+    )
+    if n >= 1000 and ratio < 3.0:
+        raise AssertionError(
+            f"table11: per-device peak shrank only {ratio:.2f}x from "
+            "1 -> 8 shards (expected >= 3x)"
+        )
 
 
 def table7_cyclic(n: int, verify: bool) -> None:

@@ -62,6 +62,7 @@ class Q:
     engine_name: str | Engine = "tensor"
     budget: int | None = None
     stream_opt: tuple[str, int] | None = None
+    mesh_opt: "object | None" = None  # jax Mesh or shard count
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -196,6 +197,13 @@ class Q:
     def stream(self, attr: str, tile: int) -> "Q":
         """Explicit group-axis streaming plan (tensor engine only)."""
         return replace(self, stream_opt=(attr, int(tile)))
+
+    def mesh(self, mesh) -> "Q":
+        """Execute over a device mesh (mesh-capable engines only): a
+        ``jax.sharding.Mesh``, or a shard count over the data axis —
+        the root group attribute's CSR row ranges are partitioned
+        one-per-device (DESIGN.md §8)."""
+        return replace(self, mesh_opt=mesh)
 
     # ------------------------------------------------------------------
     def plan(self, db: Database) -> Plan:

@@ -87,7 +87,13 @@ class Engine(Protocol):
 
         ``memory_budget`` is advisory — engines with an internal physical
         choice (the jax engine's dense-vs-sparse path) use it; others may
-        ignore it (the planner already resolved ``stream`` from it)."""
+        ignore it (the planner already resolved ``stream`` from it).
+
+        Engines that can execute over a device mesh set a
+        ``supports_mesh = True`` class attribute and accept a ``mesh``
+        keyword (a :class:`jax.sharding.Mesh` or a shard count); the
+        planner raises :class:`UnsupportedPlanOption` before calling an
+        engine that cannot honor a requested mesh."""
         ...
 
 
@@ -189,8 +195,11 @@ class JaxChannelEngine:
 
     name = "jax"
     supports_streaming = True
+    supports_mesh = True
 
-    def run(self, prep, channels, minmax, stream=None, memory_budget=None):
+    def run(
+        self, prep, channels, minmax, stream=None, memory_budget=None, mesh=None
+    ):
         from repro.core.jax_engine import (
             build_sparse_program,
             choose_jax_path,
@@ -198,6 +207,8 @@ class JaxChannelEngine:
         )
 
         cm = tuple(ch.measure[0] if ch.kind == "sum" else None for ch in channels)
+        if mesh is not None:
+            return self._run_distributed(prep, channels, minmax, cm, mesh)
         choice = choose_jax_path(
             prep, k=len(channels), memory_budget=memory_budget, stream=stream,
             measured=cm,
@@ -222,6 +233,27 @@ class JaxChannelEngine:
                 )
                 for req in minmax
             }
+            outs.append(
+                sparsify(prep, channels, arr.astype(np.float64), mm, offsets)
+            )
+        return outs
+
+    def _run_distributed(self, prep, channels, minmax, cm, mesh):
+        """Sharded sparse execution over the mesh's data axis: per-shard
+        CSR partitions of the root group attribute under ``shard_map``,
+        one :class:`EngineOutput` per shard (DESIGN.md §8).  MIN/MAX ride
+        the same program as ``(min, +)`` semiring outputs, masked by the
+        COUNT channel like every other sparse path."""
+        from repro.core.distributed import build_distributed_program
+
+        prog = build_distributed_program(
+            prep, cm, mesh, minmax=tuple((r.kind, r.measure[0]) for r in minmax)
+        )
+        outs = []
+        for arr, mm_arrs, offsets in prog.run():
+            # minmax arrays already hold 0.0 where unreached; sparsify
+            # keeps only COUNT>0 rows, the same support mask
+            mm = dict(zip(minmax, mm_arrs))
             outs.append(
                 sparsify(prep, channels, arr.astype(np.float64), mm, offsets)
             )

@@ -129,6 +129,9 @@ class Plan:
     memory_budget: int | None
     stream: tuple[str, int] | None
     root_notes: tuple[str, ...] = ()
+    # device mesh (jax.sharding.Mesh or a shard count) from Q.mesh();
+    # execute(mesh=...) overrides per call
+    mesh: "object | None" = None
 
     # ------------------------------------------------------------------
     def _require_physical(self) -> None:
@@ -173,14 +176,39 @@ class Plan:
         return (attr, tile)
 
     # ------------------------------------------------------------------
-    def execute(self) -> AggResult:
-        """Run every named aggregate in a single contraction pass."""
+    def execute(self, mesh: "object | None" = None) -> AggResult:
+        """Run every named aggregate in a single contraction pass.
+
+        ``mesh`` (or the plan's ``Q.mesh(...)`` option) runs the sharded
+        distributed-sparse path: a ``jax.sharding.Mesh``, or a shard
+        count over the data axis (DESIGN.md §8).  A mesh composes with
+        the advisory ``memory_budget`` by superseding it (the shard
+        partition IS the memory bound) but an *explicit* ``stream``
+        plan cannot be honored and raises."""
         self._require_physical()
+        mesh = mesh if mesh is not None else self.mesh
         kwargs = {}
         if _accepts_memory_budget(self.engine):
             kwargs["memory_budget"] = self.memory_budget
+        if mesh is not None:
+            if not getattr(self.engine, "supports_mesh", False):
+                raise UnsupportedPlanOption(
+                    f"engine {self.engine.name!r} cannot execute over a "
+                    "device mesh; use the 'jax' engine"
+                )
+            if self.stream is not None:
+                raise UnsupportedPlanOption(
+                    "explicit stream tiling cannot run on a device mesh "
+                    "(the shard partition replaces group-axis tiles); "
+                    "drop .stream(...) or the mesh"
+                )
+            kwargs["mesh"] = mesh
+            kwargs.pop("memory_budget", None)  # sharding IS the bound
         outputs = self.engine.run(
-            self.prep, self.channels, self.minmax, self._resolved_stream(),
+            self.prep,
+            self.channels,
+            self.minmax,
+            None if mesh is not None else self._resolved_stream(),
             **kwargs,
         )
         return _assemble(self, outputs)
@@ -248,7 +276,15 @@ class Plan:
                 f"root={prep.decomposition.root}, "
                 f"est peak message {_fmt_bytes(self.message_peak)}"
             )
-        stream = self._resolved_stream()
+        meshed = self.mesh is not None
+        if meshed:
+            from repro.core.distributed import mesh_shards, shard_attr
+
+            lines.append(
+                f"mesh: {mesh_shards(self.mesh)} shard(s) of group attr "
+                f"{shard_attr(self.prep)!r} on the data axis"
+            )
+        stream = None if meshed else self._resolved_stream()
         if stream is not None:
             lines.append(
                 f"stream: tile group attr {stream[0]!r} × {stream[1]} "
@@ -279,9 +315,15 @@ class Plan:
         return "\n".join(lines)
 
     def _explain_jax_path(self, stream) -> list[str]:
-        """Dense-vs-sparse choice + per-node byte estimates (jax engine)."""
+        """Dense-vs-sparse(-vs-distributed) choice + per-node byte
+        estimates (jax engine)."""
         from repro.core.jax_engine import choose_jax_path
 
+        shards = None
+        if self.mesh is not None:
+            from repro.core.distributed import mesh_shards
+
+            shards = mesh_shards(self.mesh)
         choice = choose_jax_path(
             self.prep,
             k=max(len(self.channels), 1),
@@ -292,7 +334,22 @@ class Plan:
                 for ch in self.channels
                 if ch.kind == "sum" and ch.measure
             ),
+            shards=shards,
         )
+        if choice.path == "distributed-sparse":
+            lines = [
+                f"jax path: {choice.path} — {choice.reason}; "
+                f"est per-device peak {_fmt_bytes(choice.per_device_peak)} "
+                f"vs single-device sparse peak "
+                f"{_fmt_bytes(choice.sparse_peak)}"
+            ]
+            for rel in choice.per_device_node_bytes:
+                lines.append(
+                    f"  {rel}: per-device "
+                    f"{_fmt_bytes(choice.per_device_node_bytes[rel])} "
+                    f"/ single {_fmt_bytes(choice.sparse_node_bytes[rel])}"
+                )
+            return lines
         lines = [
             f"jax path: {choice.path} — {choice.reason}; "
             f"est dense peak {_fmt_bytes(choice.dense_peak)} "
@@ -407,6 +464,19 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         query0 = JoinAggQuery(rel_names, tuple(group_by), primary)
 
     engine = resolve_engine(spec.engine_name)
+    meshed = getattr(spec, "mesh_opt", None) is not None
+    if meshed and not getattr(engine, "supports_mesh", False):
+        raise UnsupportedPlanOption(
+            f"engine {engine.name!r} cannot execute over a device mesh "
+            "(only mesh-capable engines do); drop .mesh(...) or use the "
+            "'jax' engine"
+        )
+    if meshed and spec.stream_opt is not None:
+        raise UnsupportedPlanOption(
+            "explicit stream tiling cannot run on a device mesh (the "
+            "shard partition replaces group-axis tiles); drop "
+            ".stream(...) or .mesh(...)"
+        )
     if (spec.stream_opt is not None or spec.budget is not None) and (
         not engine.supports_streaming
     ):
@@ -463,6 +533,7 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         memory_budget=spec.budget,
         stream=spec.stream_opt,
         root_notes=root_notes,
+        mesh=getattr(spec, "mesh_opt", None),
     )
 
 

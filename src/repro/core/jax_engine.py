@@ -671,10 +671,15 @@ def build_sparse_program(
 class JaxPathChoice:
     """Outcome of :func:`choose_jax_path`, rendered by ``Plan.explain()``."""
 
-    path: str  # "dense" | "sparse"
+    path: str  # "dense" | "sparse" | "distributed-sparse"
     reason: str
     dense_node_bytes: dict[str, int] = field(default_factory=dict)
     sparse_node_bytes: dict[str, int] = field(default_factory=dict)
+    # meshed plans only: per-node bytes on ONE device of the shard mesh
+    # (sharded relations/messages divide by the shard count, replicated
+    # subtrees do not) — the currency of the distributed path's explain
+    per_device_node_bytes: dict[str, int] = field(default_factory=dict)
+    shards: int = 1
 
     @property
     def dense_peak(self) -> int:
@@ -685,6 +690,36 @@ class JaxPathChoice:
     def sparse_peak(self) -> int:
         return max(self.sparse_node_bytes.values(), default=0)
 
+    @property
+    def per_device_peak(self) -> int:
+        return max(self.per_device_node_bytes.values(), default=0)
+
+
+def _node_message_attrs(prep: Prepared) -> dict[str, set[str]]:
+    """Attrs carried by each node's upward message (shared-with-parent +
+    subtree group attrs) — membership only, for shard-split estimates."""
+    deco = prep.decomposition
+
+    def subtree_gattrs(rel: str) -> set[str]:
+        out = set()
+        g = prep.schema.group_of.get(rel)
+        if g:
+            out.add(g)
+        for c in deco.nodes[rel].children:
+            out |= subtree_gattrs(c)
+        return out
+
+    out: dict[str, set[str]] = {}
+    for rel in deco.order:
+        node = deco.nodes[rel]
+        up: set[str] = set()
+        if node.parent is not None:
+            up = set(prep.schema.relevant[rel]) & set(
+                prep.schema.relevant[node.parent]
+            )
+        out[rel] = up | subtree_gattrs(rel)
+    return out
+
 
 def choose_jax_path(
     prep: Prepared,
@@ -692,6 +727,7 @@ def choose_jax_path(
     memory_budget: int | None = None,
     stream: tuple[str, int] | None = None,
     measured: tuple[str, ...] = (),
+    shards: int | None = None,
 ) -> JaxPathChoice:
     """Estimate per-node dense-vs-sparse peak bytes and pick the path.
 
@@ -704,6 +740,12 @@ def choose_jax_path(
     message.  Sparse wins when an explicit ``stream`` is set (dense
     cannot tile), when any dense tensor crosses the 2^24 element cliff,
     or when the dense program exceeds the memory budget.
+
+    ``shards`` (a mesh's data-axis extent) forces the third path,
+    ``distributed-sparse`` — the dense program is retired on meshes —
+    and fills ``per_device_node_bytes``: edge arrays and messages that
+    carry the shard attribute divide by the shard count, replicated
+    subtrees keep their full size (DESIGN.md §8).
     """
     from repro.core.operator import DEFAULT_MEMORY_BUDGET, node_message_bytes
 
@@ -726,6 +768,28 @@ def choose_jax_path(
         edge_bytes = er.codes.nbytes + 4 * k * er.num_rows
         sparse_nodes[rel] = edge_bytes + msg_f32 * k
     choice = JaxPathChoice("dense", "", dense_nodes, sparse_nodes)
+    if shards is not None:
+        from repro.core.distributed import shard_attr
+
+        attr = shard_attr(prep)
+        msg_attrs = _node_message_attrs(prep)
+        per_dev: dict[str, int] = {}
+        for rel, er in prep.encoded.items():
+            edge_bytes = er.codes.nbytes + 4 * k * er.num_rows
+            if attr in er.attrs:
+                edge_bytes //= shards
+            msg_f32 = (msg[rel] // 2) * k
+            if attr in msg_attrs[rel]:
+                msg_f32 //= shards
+            per_dev[rel] = edge_bytes + msg_f32
+        choice.path = "distributed-sparse"
+        choice.shards = shards
+        choice.per_device_node_bytes = per_dev
+        choice.reason = (
+            f"mesh over {shards} shard(s) of {attr!r} on the data axis "
+            "(dense einsum is retired on meshes)"
+        )
+        return choice
     if stream is not None:
         choice.path = "sparse"
         choice.reason = f"stream tiles over {stream[0]!r} (dense cannot tile)"

@@ -55,6 +55,26 @@ class CSRView:
         b = int(np.searchsorted(self.keys, hi, "left"))
         return slice(a, b)
 
+    def shard(self, num_shards: int) -> list[tuple[int, int, slice]]:
+        """Partition the key space into ``num_shards`` contiguous row
+        ranges: ``(key_lo, key_hi, edge_slice)`` per shard, edge slices
+        into the sorted order (DESIGN.md §8).
+
+        Ranges are equal-width over the key domain (the last shards may
+        be empty when ``num_keys < num_shards``) — the distributed path's
+        source partitioning, where every shard's edges are one contiguous
+        CSR block found by two binary searches, never a COO scan.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        tile = max(1, -(-self.num_keys // num_shards))
+        out: list[tuple[int, int, slice]] = []
+        for s in range(num_shards):
+            lo = min(s * tile, self.num_keys)
+            hi = min(lo + tile, self.num_keys)
+            out.append((lo, hi, self.slice_range(lo, hi)))
+        return out
+
 
 def grouped_csr(
     er: EncodedRelation, key_attrs: tuple[str, ...], dims: tuple[int, ...]
@@ -91,6 +111,11 @@ class Prepared:
         if self.measure_moves is None:
             self.measure_moves = {}
         self._csr_cache: dict[tuple[str, tuple[str, ...]], CSRView] = {}
+        # engine-owned compiled-program memos (e.g. the distributed path
+        # caches its built+jitted shard program per (channels, mesh) so
+        # repeated Plan.execute(mesh=...) calls reuse one compile); keys
+        # are namespaced by the engine, lifetime is the Prepared's
+        self._program_cache: dict = {}
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:

@@ -267,12 +267,16 @@ def ghd_join_agg(
     memory_budget: int | None = None,
     stream: tuple[str, int] | None = None,
     plan: GHDPlan | None = None,
+    mesh=None,
 ) -> dict[tuple, float]:
     """Execute a cyclic join-aggregate query through the GHD compiler.
 
     Pass a precompiled ``plan`` (from :func:`compile_ghd`) to amortize
     bag materialization across engines/runs — the cyclic analogue of the
-    acyclic engines' ``prep=`` argument."""
+    acyclic engines' ``prep=`` argument.  ``mesh`` (jax engine only)
+    shards the derived bag tree over a device mesh: the materialized bag
+    relations feed the distributed-sparse path as CSR inputs, partitioned
+    on the root bag's group attribute (DESIGN.md §8)."""
     from repro.core.operator import (
         DEFAULT_MEMORY_BUDGET,
         peak_message_bytes,
@@ -282,6 +286,21 @@ def ghd_join_agg(
     if plan is None:
         plan = compile_ghd(query, db)
     prep = plan.prepared
+    if mesh is not None:
+        if engine != "jax":
+            raise ValueError(
+                f"mesh execution needs the jax engine, got {engine!r}"
+            )
+        if stream is not None:
+            from repro.core.operator import UnsupportedPlanOption
+
+            raise UnsupportedPlanOption(
+                "explicit stream tiling cannot run on a device mesh "
+                "(the shard partition replaces group-axis tiles)"
+            )
+        from repro.core import distributed
+
+        return distributed.run_query(prep, mesh)
     if engine == "ref":
         from repro.core.ref_engine import execute_ref
 

@@ -1,0 +1,67 @@
+"""Shared test fixtures/helpers.
+
+``run_in_virtual_mesh`` is the one way the suite runs multi-device jax
+code: the device count must be baked into ``XLA_FLAGS`` **before** jax
+initializes, so every distributed test executes its payload in a
+subprocess and reads one JSON document back.  Import it plainly
+(``from tests.conftest import run_in_virtual_mesh``) or use the
+same-named fixture.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_in_virtual_mesh(
+    script: str,
+    devices: int = 8,
+    timeout: int = 900,
+    stdin: str | None = None,
+) -> dict:
+    """Run ``script`` in a subprocess with ``devices`` virtual CPU
+    devices and return the parsed JSON of its last stdout line.
+
+    Sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (which
+    only takes effect before jax initializes — hence the subprocess),
+    pins ``JAX_PLATFORMS=cpu``, and prepends ``src`` to ``PYTHONPATH``.
+    ``stdin`` (optional) is piped to the script — the differential
+    suites feed the parent-process database through it so both sides
+    run on byte-identical inputs.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO_ROOT,
+        timeout=timeout,
+        input=stdin,
+    )
+    if res.returncode != 0:
+        raise AssertionError(
+            f"virtual-mesh subprocess failed (rc={res.returncode}):\n"
+            f"{res.stderr[-4000:]}"
+        )
+    lines = [ln for ln in res.stdout.strip().splitlines() if ln.strip()]
+    if not lines:
+        raise AssertionError(f"virtual-mesh subprocess printed no JSON:\n{res.stderr[-2000:]}")
+    return json.loads(lines[-1])
+
+
+@pytest.fixture(name="run_in_virtual_mesh")
+def run_in_virtual_mesh_fixture():
+    return run_in_virtual_mesh

@@ -1,20 +1,21 @@
-"""Distributed JOIN-AGG on a virtual multi-device mesh (subprocess: the
-device count must be fixed before jax initializes)."""
-import json
-import subprocess
-import sys
+"""Distributed JOIN-AGG on a virtual multi-device mesh.
 
+The payload runs through :func:`tests.conftest.run_in_virtual_mesh`
+(subprocess: the device count must be fixed before jax initializes) and
+drives the sharded **sparse** path — per-shard CSR partitions of the
+root group attribute under ``shard_map`` — against the materialized-join
+oracle, plus the AOT lowering the multi-pod dry-run compiles.
+"""
 import pytest
+
+from tests.conftest import run_in_virtual_mesh
 
 pytestmark = pytest.mark.slow  # subprocess jax init + 8-device compile
 
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.core.prepare import prepare
 from repro.core.query import JoinAggQuery
@@ -38,23 +39,17 @@ assert set(got) == set(want), (len(got), len(want))
 for k, v in want.items():
     assert abs(got[k] - v) < 1e-6 * max(1, abs(v)), (k, got[k], v)
 
-# AOT lowering + compile must also succeed and contain a partitioned module
+# AOT lowering + compile must also succeed, and the partitioned module
+# must combine the per-shard group partials with a collective
 lowered = distributed.lower_distributed(prep, mesh)
 compiled = lowered.compile()
 mem = compiled.memory_analysis()
-print(json.dumps({"ok": True, "ngroups": len(got)}))
+has_gather = "all-gather" in compiled.as_text()
+print(json.dumps({"ok": True, "ngroups": len(got), "all_gather": has_gather}))
 """
 
 
 def test_distributed_matches_oracle_on_virtual_mesh():
-    res = subprocess.run(
-        [sys.executable, "-c", SCRIPT],
-        capture_output=True,
-        text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd=".",
-        timeout=600,
-    )
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_in_virtual_mesh(SCRIPT, devices=8)
     assert out["ok"] and out["ngroups"] > 0
+    assert out["all_gather"], "sharded program lost its final all-gather"

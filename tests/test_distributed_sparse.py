@@ -1,0 +1,301 @@
+"""Differential suite: the sharded distributed-sparse path (DESIGN.md §8)
+must be **bit-identical** to the single-device tensor engine.
+
+The mesh side runs in one 8-virtual-device subprocess
+(:func:`tests.conftest.run_in_virtual_mesh`); the parent process feeds
+both sides the exact same database through stdin and computes the tensor
+oracle in-process.  Covered: every aggregate kind (COUNT/SUM/AVG/MIN/
+MAX) as a fused multi-aggregate bundle, the single-aggregate core entry
+point, a cyclic (GHD) query whose materialized bags feed the sharded
+path, and a mesh where most shards own zero source rows.
+
+``test_explain_renders_distributed_path`` needs no devices (an int mesh
+spec never resolves them) and runs in the default fast suite.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.api import Q, UnsupportedPlanOption
+from repro.core.query import JoinAggQuery
+from repro.core.tensor_engine import execute_tensor
+from repro.data.queries import triangle_like
+from repro.relational.relation import Database
+
+from tests.conftest import run_in_virtual_mesh
+
+RNG = np.random.default_rng(29)
+
+
+def _chain_db(n=180, a=7, b=6):
+    return {
+        "R1": {"g1": RNG.integers(0, a, n), "p": RNG.integers(0, b, n)},
+        "R2": {
+            "p": RNG.integers(0, b, n),
+            "q": RNG.integers(0, b, n),
+            "m": RNG.integers(0, 10, n),
+        },
+        "R3": {"q": RNG.integers(0, b, n), "g2": RNG.integers(0, a, n)},
+    }
+
+
+def _skew_db(n=60):
+    # root group domain 3 < 8 shards: five shards own zero source rows
+    return {
+        "R1": {"g1": RNG.integers(0, 3, n), "p": RNG.integers(0, 4, n)},
+        "R2": {"p": RNG.integers(0, 4, n), "m": RNG.integers(0, 8, n)},
+        "R3": {"p": RNG.integers(0, 4, n), "g2": RNG.integers(0, 3, n)},
+    }
+
+
+def _listified(mapping: dict) -> dict:
+    # JSON-safe copy (the module-level dbs keep numpy columns)
+    return {
+        r: {c: np.asarray(v).tolist() for c, v in cols.items()}
+        for r, cols in mapping.items()
+    }
+
+
+CHAIN = _chain_db()
+SKEW = _skew_db()
+TRI_DB, TRI_Q = triangle_like(300)
+
+BUNDLE_AGGS = dict(
+    c=Count(), total=Sum("R2.m"), lo=Min("R2.m"), hi=Max("R2.m"),
+    mean=Avg("R2.m"),
+)
+
+
+def _to_mapping(db: Database) -> dict:
+    return {
+        name: {c: np.asarray(v).tolist() for c, v in rel.columns.items()}
+        for name, rel in db.relations.items()
+    }
+
+
+def _bundle_q(rels=("R1", "R2", "R3"), group=("R1.g1", "R3.g2")):
+    return Q.over(*rels).group_by(*group).agg(**BUNDLE_AGGS)
+
+
+def _result_doc(res) -> dict:
+    return {
+        "groups": [[int(v) for v in t] for t in res.group_tuples()],
+        "cols": {
+            name: [float(v) for v in res.column(name)]
+            for name in res.agg_names
+        },
+    }
+
+
+SCRIPT = r"""
+import json
+import sys
+
+import numpy as np
+
+from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.api import Q
+from repro.core import distributed
+from repro.core.prepare import prepare
+from repro.core.query import JoinAggQuery
+from repro.relational.relation import Database
+
+payload = json.load(sys.stdin)
+dbs = {
+    name: Database.from_mapping(
+        {r: {c: np.asarray(v) for c, v in cols.items()} for r, cols in m.items()}
+    )
+    for name, m in payload["dbs"].items()
+}
+BUNDLE = dict(
+    c=Count(), total=Sum("R2.m"), lo=Min("R2.m"), hi=Max("R2.m"),
+    mean=Avg("R2.m"),
+)
+
+def doc(res):
+    return {
+        "groups": [[int(v) for v in t] for t in res.group_tuples()],
+        "cols": {n: [float(v) for v in res.column(n)] for n in res.agg_names},
+    }
+
+out = {}
+
+# fused multi-aggregate bundle, 8 shards
+chain = dbs["chain"]
+q = Q.over("R1", "R2", "R3").group_by("R1.g1", "R3.g2").agg(**BUNDLE)
+out["bundle"] = doc(q.engine("jax").mesh(8).plan(chain).execute())
+
+# single-aggregate core entry point, every kind
+singles = {}
+for kind, agg in [
+    ("count", None),
+    ("sum", Sum("R2", "m")),
+    ("min", Min("R2", "m")),
+    ("max", Max("R2", "m")),
+]:
+    group = (("R1", "g1"), ("R3", "g2"))
+    if agg is None:
+        jq = JoinAggQuery(("R1", "R2", "R3"), group)
+    else:
+        jq = JoinAggQuery(("R1", "R2", "R3"), group, agg)
+    res = distributed.run_query(prepare(jq, chain), 8)
+    singles[kind] = sorted([list(map(int, k)), float(v)] for k, v in res.items())
+out["single"] = singles
+
+# cyclic (GHD): materialized bags feed the sharded path as CSR inputs
+tq = JoinAggQuery(
+    tuple(payload["tri_rels"]),
+    tuple((r, a) for r, a in payload["tri_group"]),
+)
+res = Q.from_query(tq).engine("jax").mesh(8).plan(dbs["tri"]).execute()
+out["cyclic"] = sorted(
+    [list(map(int, k)), float(v)] for k, v in res.to_dict().items()
+)
+
+# mesh where five of eight shards own zero source rows
+qs = Q.over("R1", "R2", "R3").group_by("R1.g1", "R3.g2").agg(**BUNDLE)
+out["skew"] = doc(qs.engine("jax").mesh(8).plan(dbs["skew"]).execute())
+
+print(json.dumps(out))
+"""
+
+pytestmark = []  # per-test marks below: the subprocess tests are slow
+
+
+@pytest.fixture(scope="module")
+def mesh_results():
+    payload = json.dumps(
+        {
+            "dbs": {
+                "chain": _listified(CHAIN),
+                "skew": _listified(SKEW),
+                "tri": _to_mapping(TRI_DB),
+            },
+            "tri_rels": list(TRI_Q.relations),
+            "tri_group": [list(g) for g in TRI_Q.group_by],
+        }
+    )
+    return run_in_virtual_mesh(SCRIPT, devices=8, stdin=payload)
+
+
+@pytest.mark.slow
+def test_bundle_bit_identical_to_tensor(mesh_results):
+    db = Database.from_mapping(CHAIN)
+    want = _result_doc(_bundle_q().engine("tensor").plan(db).execute())
+    assert mesh_results["bundle"] == want
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["count", "sum", "min", "max"])
+def test_single_aggregates_bit_identical(mesh_results, kind):
+    db = Database.from_mapping(CHAIN)
+    aggs = {"sum": Sum, "min": Min, "max": Max}
+    group = (("R1", "g1"), ("R3", "g2"))
+    if kind in aggs:
+        q = JoinAggQuery(("R1", "R2", "R3"), group, aggs[kind]("R2", "m"))
+    else:
+        q = JoinAggQuery(("R1", "R2", "R3"), group)
+    want = sorted(
+        [list(map(int, k)), float(v)]
+        for k, v in execute_tensor(q, db).items()
+    )
+    assert mesh_results["single"][kind] == want
+
+
+@pytest.mark.slow
+def test_cyclic_ghd_bit_identical(mesh_results):
+    want = sorted(
+        [list(map(int, k)), float(v)]
+        for k, v in Q.from_query(TRI_Q)
+        .engine("tensor")
+        .plan(TRI_DB)
+        .execute()
+        .to_dict()
+        .items()
+    )
+    assert mesh_results["cyclic"] == want
+
+
+@pytest.mark.slow
+def test_zero_row_shards_bit_identical(mesh_results):
+    db = Database.from_mapping(SKEW)
+    want = _result_doc(_bundle_q().engine("tensor").plan(db).execute())
+    assert mesh_results["skew"] == want
+
+
+# ----------------------------------------------------------------------
+# fast (deviceless) regressions: explain + option validation
+# ----------------------------------------------------------------------
+
+
+def test_explain_renders_distributed_path():
+    """The explain output is load-bearing for the perf gate: a meshed
+    plan must render the distributed path line with per-device bytes.
+    An int mesh spec never resolves devices, so this runs anywhere."""
+    db = Database.from_mapping(CHAIN)
+    text = _bundle_q().engine("jax").mesh(8).plan(db).explain()
+    assert "jax path: distributed-sparse" in text
+    assert "mesh: 8 shard(s) of group attr" in text
+    assert "est per-device peak" in text
+    assert "per-device" in text.split("jax path:")[1]
+    # un-meshed plans say nothing about a mesh
+    assert "per-device" not in _bundle_q().engine("jax").plan(db).explain()
+
+
+def test_mesh_on_meshless_engine_raises():
+    db = Database.from_mapping(CHAIN)
+    with pytest.raises(UnsupportedPlanOption):
+        _bundle_q().engine("tensor").mesh(8).plan(db)
+    plan = _bundle_q().engine("tensor").plan(db)
+    with pytest.raises(UnsupportedPlanOption):
+        plan.execute(mesh=8)
+
+
+def test_mesh_with_explicit_stream_raises():
+    """An explicit stream plan cannot be silently discarded by a mesh
+    (options an engine cannot honor must raise, per the README)."""
+    db = Database.from_mapping(CHAIN)
+    with pytest.raises(UnsupportedPlanOption):
+        _bundle_q().engine("jax").stream("g1", 2).mesh(8).plan(db)
+    plan = _bundle_q().engine("jax").stream("g1", 2).plan(db)
+    with pytest.raises(UnsupportedPlanOption):
+        plan.execute(mesh=8)
+
+
+def test_distributed_program_memoized_per_mesh():
+    """Repeated Plan.execute(mesh=...) must reuse one built+jitted
+    program (keyed on the Prepared), not re-slice and re-trace."""
+    from repro.core.distributed import build_distributed_program
+    from repro.core.prepare import prepare as _prepare
+
+    db = Database.from_mapping(CHAIN)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    prep = _prepare(q, db)
+    prog = build_distributed_program(prep, (None,), 1)
+    assert build_distributed_program(prep, (None,), 1) is prog
+    # a different Prepared owns its own cache
+    prep2 = _prepare(q, db)
+    assert build_distributed_program(prep2, (None,), 1) is not prog
+
+
+def test_csr_view_shard_partitions_key_space():
+    from repro.core.prepare import prepare as _prepare
+
+    db = Database.from_mapping(CHAIN)
+    q = JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2")))
+    prep = _prepare(q, db)
+    view = prep.csr_view("R1", ("g1",))
+    shards = view.shard(3)
+    assert len(shards) == 3
+    assert shards[0][0] == 0 and shards[-1][1] == view.num_keys
+    covered = np.concatenate(
+        [view.order[sl] for _, _, sl in shards]
+    )
+    assert sorted(covered.tolist()) == list(range(len(view.keys)))
+    for lo, hi, sl in shards:
+        assert np.all((view.keys[sl] >= lo) & (view.keys[sl] < hi))
+    # more shards than keys: trailing shards are empty, never an error
+    many = view.shard(view.num_keys + 3)
+    assert sum(s.stop - s.start for _, _, s in many) == len(view.keys)
