@@ -118,6 +118,41 @@ def distributed_delta_lines(fresh: dict[str, dict]) -> list[str]:
     return lines
 
 
+def serving_delta_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-12 serving latency / cache / fusion summary as markdown."""
+    cold = fresh.get("table12,SERVE,cold_query")
+    warm = fresh.get("table12,SERVE,warm_query")
+    load = fresh.get("table12,SERVE,concurrent_load")
+    serial = fresh.get("table12,SERVE,serial_repeated")
+    fused = fresh.get("table12,SERVE,fused_repeated")
+    if not (cold and warm):
+        return ["_no table-12 records in this run_"]
+    lines = [
+        "| metric | value |",
+        "|---|---:|",
+        f"| cold query (compile + run, µs) | {cold['us_per_call']:.0f} |",
+        f"| warm query (plan-cache hit, µs) | {warm['us_per_call']:.0f} |",
+    ]
+    if load:
+        lines += [
+            f"| concurrent qps | {derived_field(load, 'qps')} |",
+            f"| p50 latency (µs) | {derived_field(load, 'p50_us')} |",
+            f"| p99 latency (µs) | {derived_field(load, 'p99_us')} |",
+        ]
+    if serial and fused:
+        lines += [
+            f"| serial repeated-shape (µs) | {serial['us_per_call']:.0f} |",
+            f"| fused repeated-shape (µs) | {fused['us_per_call']:.0f} |",
+        ]
+        lines.append(
+            f"\ncross-client fusion speedup vs serial: "
+            f"**{derived_field(fused, 'speedup_vs_serial')}** "
+            f"({derived_field(fused, 'shared_identical')} queries shared "
+            f"{derived_field(fused, 'compiles')} compiled plan(s))"
+        )
+    return lines
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -195,6 +230,10 @@ def main(argv: list[str] | None = None) -> int:
         "### Distributed-sparse sharding (table 11)",
         "",
         *distributed_delta_lines(fresh),
+        "",
+        "### Query serving (table 12)",
+        "",
+        *serving_delta_lines(fresh),
         "",
     ]
     if failures:

@@ -13,7 +13,7 @@ import argparse
 
 from benchmarks import common, tables
 
-TABLES = ["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11"]
+TABLES = ["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12"]
 
 
 def main() -> None:
@@ -58,6 +58,8 @@ def main() -> None:
         tables.table10_sparse(n_chain, verify)
     if run_all or args.table == "11":
         tables.table11_distributed(n_chain, verify)
+    if run_all or args.table == "12":
+        tables.table12_serving(n_chain, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
 

@@ -420,7 +420,10 @@ def build_distributed_program(
 
     Memoized on the ``Prepared`` per (channels, minmax, mesh): repeated
     ``Plan.execute(mesh=...)`` calls reuse one built program and one
-    shard_map compile instead of re-slicing and re-tracing every call."""
+    shard_map compile instead of re-slicing and re-tracing every call.
+    The memo is the bounded :class:`~repro.serve.cache.LRUCache` on
+    ``Prepared._program_cache`` (hit/miss/eviction counters included), so
+    a server-cached plan cannot pin unboundedly many shard programs."""
     mesh = resolve_mesh(mesh)
     cache = prep._program_cache
     key = ("distributed", tuple(channel_measures), tuple(minmax), mesh)

@@ -39,6 +39,7 @@ from repro.core.tensor_engine import (
     channel_weight_matrices,
 )
 from repro.relational.relation import Database
+from repro.serve.cache import LRUCache
 
 MAX_DENSE_ELEMS = 1 << 26
 # a single relation tensor beyond this many elements pushes the dense
@@ -89,14 +90,24 @@ class DenseProgram:
 # queries — most importantly the incremental maintainer's fold/cyclic
 # refreshes, which rebuild a fresh ``Prepared`` per delta batch — reuse
 # one traced+compiled program instead of re-jitting every refresh.
-# Hard-capped: a jit wrapper retains one executable per input-shape
-# combination, so long-lived processes with many distinct query
-# structures (or steadily growing domains) would otherwise accumulate
-# compiled programs without bound; on overflow the whole cache is
-# dropped and the executables become garbage-collectable again.
+# Bounded: a jit wrapper retains one executable per input-shape
+# combination, so long-lived processes (the query server above all) with
+# many distinct query structures or steadily growing domains would
+# otherwise accumulate compiled programs without bound.  The shared
+# LRUCache evicts one coldest entry at a time (the old behaviour dropped
+# the whole cache on overflow) and keeps hit/miss/eviction counters,
+# surfaced by ``jit_cache_stats()`` and the server's ``stats()``.
 _PROGRAM_CACHE_MAX = 32
-_FN_CACHE: dict[tuple, Callable] = {}
-_JIT_CACHE: dict[tuple, Callable] = {}
+_FN_CACHE = LRUCache(_PROGRAM_CACHE_MAX, name="einsum-fns")
+_JIT_CACHE = LRUCache(_PROGRAM_CACHE_MAX, name="jit-programs")
+
+
+def jit_cache_stats() -> dict[str, dict[str, int]]:
+    """Counters of the process-wide program memos (DESIGN.md §9)."""
+    return {
+        "fns": {"size": len(_FN_CACHE), **_FN_CACHE.stats.snapshot()},
+        "jits": {"size": len(_JIT_CACHE), **_JIT_CACHE.stats.snapshot()},
+    }
 
 
 def _dense_plan(prep: Prepared) -> tuple[tuple, str]:
@@ -147,11 +158,7 @@ def build_dense_program(prep: Prepared) -> DenseProgram:
     works by swapping the measure relation's tensor weights)."""
     plan, root = _dense_plan(prep)
     key = (plan, root)
-    fn = _FN_CACHE.get(key)
-    if fn is None:
-        if len(_FN_CACHE) >= _PROGRAM_CACHE_MAX:
-            _FN_CACHE.clear()
-        fn = _FN_CACHE.setdefault(key, _fn_from_plan(plan, root))
+    fn = _FN_CACHE.get_or_create(key, lambda: _fn_from_plan(plan, root))
     return DenseProgram(
         prep, fn, {r: prep.encoded[r].attrs for r in prep.encoded}, key
     )
@@ -293,11 +300,7 @@ def execute_jax_channels(
     )
     assert root_carries, z_rels
     key = ("channels", chplan, root)
-    fn = _FN_CACHE.get(key)
-    if fn is None:
-        if len(_FN_CACHE) >= _PROGRAM_CACHE_MAX:
-            _FN_CACHE.clear()
-        fn = _FN_CACHE.setdefault(key, _fn_from_plan(chplan, root))
+    fn = _FN_CACHE.get_or_create(key, lambda: _fn_from_plan(chplan, root))
 
     tensors: dict[str, jax.Array] = {}
     for r in prep.encoded:
@@ -321,12 +324,7 @@ def execute_jax_channels(
 
 
 def _jit_for(key, fn) -> Callable:
-    jitted = _JIT_CACHE.get(key)
-    if jitted is None:
-        if len(_JIT_CACHE) >= _PROGRAM_CACHE_MAX:
-            _JIT_CACHE.clear()
-        jitted = _JIT_CACHE.setdefault(key, jax.jit(fn))
-    return jitted
+    return _JIT_CACHE.get_or_create(key, lambda: jax.jit(fn))
 
 
 # ----------------------------------------------------------------------

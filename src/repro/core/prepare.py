@@ -28,6 +28,7 @@ from repro.relational.encoding import (
     reduce_grouped,
 )
 from repro.relational.relation import Database
+from repro.serve.cache import LRUCache
 
 
 @dataclass
@@ -114,8 +115,12 @@ class Prepared:
         # engine-owned compiled-program memos (e.g. the distributed path
         # caches its built+jitted shard program per (channels, mesh) so
         # repeated Plan.execute(mesh=...) calls reuse one compile); keys
-        # are namespaced by the engine, lifetime is the Prepared's
-        self._program_cache: dict = {}
+        # are namespaced by the engine.  Bounded: a Prepared cached by the
+        # query server's plan cache lives as long as the server, and each
+        # entry pins a full set of sharded input arrays plus a shard_map
+        # executable, so the memo gets LRU eviction + counters instead of
+        # growing with every distinct (channels, mesh) ever requested.
+        self._program_cache = LRUCache(16, name="prepared-programs")
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:

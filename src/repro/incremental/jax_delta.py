@@ -17,6 +17,14 @@ partial product — the same envelope as the batch jax engine) and the
 arrays, so a device-side (donated) add would pay three transfers for one
 addition.  On CPU hosts the kernels run in interpret mode, so the whole
 incremental path is exercisable in CI.
+
+Program memoization: this engine keeps no memo dict of its own — the
+delta blocks are padded to ``EDGE_BUCKET`` multiples so the Pallas
+kernels retrace only per bucket size (jax's own jit cache), and the
+plan-keyed einsum/jit memos its batch-refresh fallbacks lean on live in
+:mod:`repro.core.jax_engine`, which bounds them with the shared
+:class:`~repro.serve.cache.LRUCache` (hit/miss/eviction counters via
+``jit_cache_stats()``; DESIGN.md §9).
 """
 from __future__ import annotations
 

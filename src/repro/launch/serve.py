@@ -1,71 +1,225 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode
-with the fixed-capacity KV/state cache (the decode_32k / long_500k cells
-lower exactly this step function onto the production meshes).
+"""JOIN-AGG query server entry point (DESIGN.md §9).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --reduced --batch 4 --prompt-len 32 --gen 32
+Start a TCP server over a synthetic chain database:
+
+    PYTHONPATH=src python -m repro.launch.serve --port 7474 --scale 5000
+
+then talk to it with :func:`repro.serve.session.connect`, or over raw
+newline-delimited JSON (see :mod:`repro.serve.wire`).  The demo database
+is the paper's C1 chain R1(g1,p0) ⋈ R2(p0,p1) ⋈ R3(p1,p2) ⋈ R4(p2,g2)
+with a ``w`` measure column on R2 so SUM/AVG/MIN/MAX queries work out of
+the box.
+
+``--smoke`` runs the CI gate instead of serving forever: it starts the
+server, fires concurrent mixed-shape clients at it — repeated shapes
+exercising the warm plan cache and the fusion batcher, a maintained view
+read under writes — and exits non-zero unless every result is
+bit-identical to a single-shot ``Plan.execute()`` oracle.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
+import threading
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, get_config
-from repro.models.model import get_model
+from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.api.builder import Q
+from repro.api.plan import compile_plan
+from repro.data.synth import chain
+from repro.relational.relation import Database
+from repro.serve.server import JoinAggServer, serve_tcp
+from repro.serve.session import connect
+
+
+def demo_database(scale: int, seed: int = 0) -> Database:
+    """The C1 chain at ``scale`` rows/relation, plus a measure column."""
+    db, _ = chain("C1", scale, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    r2 = db["R2"]
+    db.add(r2.with_column("w", rng.integers(1, 100, r2.num_rows)))
+    return db
+
+
+def demo_queries() -> dict[str, Q]:
+    """The mixed query shapes the smoke clients rotate through."""
+    base = Q.over("R1", "R2", "R3", "R4")
+    return {
+        "count": base.group_by("R1.g1").agg(n=Count()),
+        "sum": base.group_by("R1.g1").agg(total=Sum("R2.w")),
+        "multi": base.group_by("R1.g1").agg(
+            n=Count(), total=Sum("R2.w"), mean=Avg("R2.w")
+        ),
+        "minmax": base.group_by("R4.g2").agg(
+            lo=Min("R2.w"), hi=Max("R2.w")
+        ),
+        "two_group": base.group_by("R1.g1", "R4.g2").agg(n=Count()),
+    }
+
+
+def run_smoke(args) -> int:
+    db = demo_database(args.scale, seed=0)
+    queries = demo_queries()
+    oracles = {
+        name: compile_plan(q, db).execute() for name, q in queries.items()
+    }
+
+    srv = JoinAggServer(
+        db, workers=args.workers, fusion_window=args.fusion_window
+    )
+    view_q = queries["count"]
+    srv.create_view("by_g1", view_q)
+
+    failures: list[str] = []
+    fail_lock = threading.Lock()
+
+    def check(name: str, res) -> None:
+        want = oracles[name]
+        if res.to_dict(res.agg_names[0]) != want.to_dict(want.agg_names[0]):
+            with fail_lock:
+                failures.append(f"{name}: result != Plan.execute() oracle")
+
+    # per-prefix oracles for the maintained view (epoch e == prefix e)
+    rng = np.random.default_rng(7)
+    deltas = [
+        {"g1": rng.integers(0, 20, 8), "p0": rng.integers(0, 20, 8)}
+        for _ in range(args.view_batches)
+    ]
+    prefix_oracles = [dict(srv.read_view("by_g1").result)]
+    shadow = compile_plan(view_q, db).maintain()
+    for d in deltas:
+        prefix_oracles.append(shadow.insert("R1", d))
+
+    def client(i: int) -> None:
+        names = list(queries)
+        for j in range(args.queries_per_client):
+            name = names[(i + j) % len(names)]
+            try:
+                check(name, srv.query(queries[name]))
+            except Exception as e:
+                with fail_lock:
+                    failures.append(f"client {i} {name}: {e!r}")
+
+    def view_reader() -> None:
+        for _ in range(40 * args.view_batches):
+            snap = srv.read_view("by_g1")
+            got = snap.result if isinstance(snap.result, dict) else None
+            want = (
+                prefix_oracles[snap.epoch]
+                if snap.epoch < len(prefix_oracles)
+                else None
+            )
+            if got != want:
+                with fail_lock:
+                    failures.append(
+                        f"view read at epoch {snap.epoch} is not the "
+                        f"prefix-{snap.epoch} oracle (torn read?)"
+                    )
+                return
+
+    threads = [
+        threading.Thread(target=client, args=(i,))
+        for i in range(args.clients)
+    ] + [threading.Thread(target=view_reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for d in deltas:
+        srv.apply_view("by_g1", "insert", "R1", d).result()
+    for t in threads:
+        t.join()
+
+    # TCP round-trip: remote result must equal the in-process oracle
+    tcp, _ = serve_tcp(srv, args.host, 0)
+    host, port = tcp.server_address
+    with connect(host, port) as remote:
+        assert remote.ping()
+        rres = remote.query(
+            {
+                "relations": ["R1", "R2", "R3", "R4"],
+                "group_by": ["R1.g1"],
+                "aggs": {"n": {"kind": "count"}},
+            }
+        )
+        check("count", rres)
+        epoch, _ = remote.view_read("by_g1")
+        if epoch != len(deltas):
+            failures.append(
+                f"view at epoch {epoch}, expected {len(deltas)} after drain"
+            )
+        stats = remote.server_stats()
+    tcp.shutdown()
+    srv.close()
+
+    print("serve-smoke stats:")
+    for section in ("plan_cache", "fusion", "jit_cache"):
+        print(f"  {section}: {stats[section]}")
+    pc = stats["plan_cache"]
+    total_queries = args.clients * args.queries_per_client
+    if pc["compiles"] >= total_queries:
+        failures.append(
+            f"plan cache never warmed: {pc['compiles']} compiles for "
+            f"{total_queries} queries"
+        )
+    if failures:
+        print(f"serve-smoke FAILED ({len(failures)} problems):")
+        for f in failures[:20]:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"serve-smoke OK: {total_queries} concurrent queries over "
+        f"{len(queries)} shapes, {len(deltas)} view batches, "
+        f"{pc['compiles']} compiles ({pc['hits']} cache hits)"
+    )
+    return 0
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="qwen2-1.5b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap = argparse.ArgumentParser(
+        description="Serve concurrent JOIN-AGG queries over TCP/JSON"
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7474)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--fusion-window", type=float, default=0.002,
+                    help="cross-client fusion window in seconds")
+    ap.add_argument("--plan-cache", type=int, default=64,
+                    help="prepared-plan cache capacity")
+    ap.add_argument("--scale", type=int, default=5000,
+                    help="rows per relation in the demo chain database")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the concurrent-correctness gate and exit")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="(smoke) concurrent client threads")
+    ap.add_argument("--queries-per-client", type=int, default=6)
+    ap.add_argument("--view-batches", type=int, default=6,
+                    help="(smoke) delta batches applied to the view")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    if args.smoke:
+        sys.exit(run_smoke(args))
 
-    B, P, G = args.batch, args.prompt_len, args.gen
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.zeros((B, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
-    if cfg.family == "audio":
-        batch["frames"] = jnp.zeros((B, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16)
-
-    # prefill feeds the recurrent families' cache directly; attention
-    # families decode against a fixed-capacity cache re-filled token-wise
-    t0 = time.time()
-    cap = P + G + (cfg.vision_patches if cfg.family == "vlm" else 0)
-    cache = model.init_cache(B, cap)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    logits = None
-    for t in range(P):
-        logits, cache = decode(params, cache, prompts[:, t : t + 1],
-                               jnp.asarray(t, jnp.int32))
-    t_prefill = time.time() - t0
-
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    for t in range(P, P + G):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    t_gen = time.time() - t0
-
-    gen = np.stack(out_tokens, axis=1)
-    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
-    print(f"[serve] prefill(token-wise)={t_prefill:.2f}s  "
-          f"decode={t_gen:.2f}s ({B * G / max(t_gen, 1e-9):.1f} tok/s)")
-    print(f"[serve] sample generations (token ids): {gen[:2, :8].tolist()}")
+    db = demo_database(args.scale)
+    core = JoinAggServer(
+        db,
+        workers=args.workers,
+        plan_cache_size=args.plan_cache,
+        fusion_window=args.fusion_window,
+    )
+    core.create_view(
+        "by_g1", demo_queries()["count"]
+    )  # a live maintained view, queryable via view_read/view_apply
+    srv, thread = serve_tcp(core, args.host, args.port)
+    host, port = srv.server_address
+    print(f"JOIN-AGG server on {host}:{port} "
+          f"(C1 chain, {args.scale} rows/relation; view 'by_g1' maintained)")
+    print("protocol: newline-delimited JSON — see repro/serve/wire.py")
+    try:
+        thread.join()
+    except KeyboardInterrupt:
+        print("shutting down")
+        srv.shutdown()
+        core.close()
 
 
 if __name__ == "__main__":

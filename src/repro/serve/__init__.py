@@ -1,0 +1,44 @@
+"""Query-serving subsystem: a long-lived, concurrent JOIN-AGG service
+layered on the logical-plan API (DESIGN.md §9).
+
+Pieces:
+
+* :mod:`repro.serve.cache`   — shared bounded LRU + the prepared-plan cache.
+* :mod:`repro.serve.batcher` — cross-client fusion of compatible in-flight
+  queries into one semiring-channel contraction pass.
+* :mod:`repro.serve.views`   — maintained-view serving: snapshot reads with
+  epoch swap while one writer thread applies delta batches.
+* :mod:`repro.serve.server`  — the server core + a TCP/JSON line protocol.
+* :mod:`repro.serve.session` — in-process sessions and the TCP client.
+
+This ``__init__`` is deliberately lazy (PEP 562): the core engines import
+``repro.serve.cache`` for their program memos, and an eager import here
+would cycle back through ``repro.api``.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "LRUCache": "repro.serve.cache",
+    "CacheStats": "repro.serve.cache",
+    "PlanCache": "repro.serve.cache",
+    "plan_shape_key": "repro.serve.cache",
+    "FusionBatcher": "repro.serve.batcher",
+    "ServedView": "repro.serve.views",
+    "ViewSnapshot": "repro.serve.views",
+    "JoinAggServer": "repro.serve.server",
+    "serve_tcp": "repro.serve.server",
+    "Session": "repro.serve.session",
+    "RemoteSession": "repro.serve.session",
+    "connect": "repro.serve.session",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,244 @@
+"""Cross-client fusion batcher (DESIGN.md §9).
+
+PR 3 fused the aggregates *within* one query into a single
+semiring-channel contraction pass; the batcher fuses across *clients*:
+compatible in-flight queries collected within a short window run as one
+pass and each client gets its own demultiplexed
+:class:`~repro.api.plan.AggResult` back.
+
+Two fusion tiers, cheapest first:
+
+* **identical shape** — every query in the group has the same plan-shape
+  key; the plan executes once and all clients share the result (the
+  repeated-shape hot path: N clients, one contraction).
+* **channel merge** — same join structure / group-by / engine / options
+  but different aggregate bundles; the bundles union into one plan whose
+  aggregate names are prefixed per client (``a0__total``, ...), the
+  merged plan runs one multi-channel pass, and each client's columns are
+  selected back out under their original names.  Per channel the tensor
+  engine's float ops run in the same order as a solo pass
+  (``ChannelTensorEngine`` is bit-identical per channel), so demuxed
+  results equal single-query execution.
+
+A query whose shape cannot be keyed (anonymous predicate, engine
+instance, mesh object) never enters a group — the server runs it solo.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable
+
+from repro.aggregates.semiring import Count
+from repro.api.plan import AggResult, Plan
+from repro.relational.relation import Relation
+
+
+@dataclass
+class BatchStats:
+    """Fusion counters."""
+
+    batches: int = 0  # fused executions (>= 2 queries in one pass)
+    fused_queries: int = 0  # queries served by a fused pass
+    shared_identical: int = 0  # ... of which were identical-shape shares
+    merged_channels: int = 0  # ... of which went through a channel merge
+    solo: int = 0  # queries executed unfused
+
+    def snapshot(self) -> dict[str, int]:
+        return {
+            "batches": self.batches,
+            "fused_queries": self.fused_queries,
+            "shared_identical": self.shared_identical,
+            "merged_channels": self.merged_channels,
+            "solo": self.solo,
+        }
+
+
+@dataclass
+class _Pending:
+    spec: "object"  # the Q builder
+    shape_key: tuple  # full plan-shape key
+    future: "object"  # concurrent.futures.Future
+
+
+@dataclass
+class _Group:
+    items: list[_Pending] = field(default_factory=list)
+    deadline: float = 0.0
+
+
+def fusion_key(shape_key: tuple) -> tuple:
+    """The compatibility class of a shape key: everything *except* the
+    aggregate bundle (index 5 of :func:`repro.serve.cache.plan_shape_key`'s
+    layout) — queries differing only in aggregates can share a pass."""
+    return shape_key[:5] + shape_key[6:]
+
+
+def effective_aggs(spec) -> tuple:
+    """The spec's aggregate bundle with the planner's COUNT default
+    applied, so merge bookkeeping sees what the plan will run."""
+    return spec.aggs or (("count", Count()),)
+
+
+class FusionBatcher:
+    """Collect compatible queries for up to ``window`` seconds, then hand
+    each group to ``dispatch`` (called on the dispatcher thread; the
+    server routes it into its worker pool).
+
+    ``window <= 0`` still fuses whatever is queued at dispatch time (a
+    burst of truly concurrent submissions can group), but never waits.
+    """
+
+    def __init__(
+        self,
+        dispatch: Callable[[list[_Pending]], None],
+        window: float = 0.002,
+    ):
+        self.window = max(0.0, float(window))
+        self._dispatch = dispatch
+        self._groups: dict[tuple, _Group] = {}
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._closed = False
+        self.stats = BatchStats()
+        self._thread = threading.Thread(
+            target=self._loop, name="joinagg-fusion-batcher", daemon=True
+        )
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, item: _Pending) -> None:
+        """Queue one pending query for fusion."""
+        key = fusion_key(item.shape_key)
+        with self._wake:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            group = self._groups.get(key)
+            if group is None:
+                group = self._groups[key] = _Group(
+                    deadline=time.monotonic() + self.window
+                )
+            group.items.append(item)
+            self._wake.notify()
+
+    def flush(self) -> None:
+        """Dispatch everything queued right now (blocks until handed off)."""
+        with self._wake:
+            groups = list(self._groups.values())
+            self._groups.clear()
+        for g in groups:
+            self._dispatch(g.items)
+
+    def close(self) -> None:
+        with self._wake:
+            self._closed = True
+            self._wake.notify()
+        self._thread.join(timeout=5)
+        self.flush()
+
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._closed and not self._groups:
+                    self._wake.wait()
+                if self._closed:
+                    return
+                now = time.monotonic()
+                deadline = min(g.deadline for g in self._groups.values())
+                if deadline > now:
+                    self._wake.wait(timeout=deadline - now)
+                    continue
+                due = [
+                    k for k, g in self._groups.items() if g.deadline <= now
+                ]
+                batches = [self._groups.pop(k) for k in due]
+            for g in batches:
+                try:
+                    self._dispatch(g.items)
+                except Exception:  # dispatch failures land on the futures
+                    pass
+
+
+# ----------------------------------------------------------------------
+# group execution (runs on a server worker)
+# ----------------------------------------------------------------------
+
+
+def run_group(items: list[_Pending], lookup_plan, stats: BatchStats) -> None:
+    """Execute one fusion group and resolve every item's future.
+
+    ``lookup_plan(spec)`` returns a compiled plan (through the server's
+    prepared-plan cache).  Identical-shape groups share one execution;
+    mixed bundles merge channels; a merge that the planner rejects
+    (name clash, incompatible measures) degrades to solo runs.
+    """
+    if not items:
+        return
+    live = [it for it in items if not it.future.cancelled()]
+    if not live:
+        return
+    try:
+        if len(live) == 1:
+            stats.solo += 1
+            _resolve_solo(live[0], lookup_plan)
+            return
+        if all(it.shape_key == live[0].shape_key for it in live):
+            result = lookup_plan(live[0].spec).execute()
+            stats.batches += 1
+            stats.fused_queries += len(live)
+            stats.shared_identical += len(live)
+            for it in live:
+                it.future.set_result(result)
+            return
+        _run_merged(live, lookup_plan, stats)
+    except Exception as e:
+        for it in live:
+            if not it.future.done():
+                it.future.set_exception(e)
+
+
+def _resolve_solo(item: _Pending, lookup_plan) -> None:
+    item.future.set_result(lookup_plan(item.spec).execute())
+
+
+def _run_merged(items: list[_Pending], lookup_plan, stats: BatchStats) -> None:
+    """Channel-merge execution: union the bundles under per-item prefixed
+    names, run once, select each item's columns back out."""
+    merged_aggs: list[tuple[str, object]] = []
+    for i, it in enumerate(items):
+        for name, agg in effective_aggs(it.spec):
+            merged_aggs.append((f"a{i}__{name}", agg))
+    merged_spec = replace(items[0].spec, aggs=tuple(merged_aggs))
+    try:
+        plan: Plan = lookup_plan(merged_spec)
+        merged = plan.execute()
+    except Exception:
+        # planner rejected the union (e.g. two bundles measure different
+        # columns of one relation) — run each query on its own
+        stats.solo += len(items)
+        for it in items:
+            try:
+                _resolve_solo(it, lookup_plan)
+            except Exception as e:
+                if not it.future.done():
+                    it.future.set_exception(e)
+        return
+    stats.batches += 1
+    stats.fused_queries += len(items)
+    stats.merged_channels += len(items)
+    for i, it in enumerate(items):
+        names = [n for n, _ in effective_aggs(it.spec)]
+        kinds = {n: a.kind for n, a in effective_aggs(it.spec)}
+        cols = {g: merged.relation.columns[g] for g in merged.group_names}
+        for n in names:
+            cols[n] = merged.relation.columns[f"a{i}__{n}"]
+        it.future.set_result(
+            AggResult(
+                group_names=merged.group_names,
+                agg_names=tuple(names),
+                agg_kinds=kinds,
+                relation=Relation("result", cols),
+            )
+        )

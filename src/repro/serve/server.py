@@ -1,0 +1,279 @@
+"""The concurrent JOIN-AGG query server (DESIGN.md §9).
+
+:class:`JoinAggServer` is the long-lived, in-process core: it owns the
+registered :class:`~repro.relational.relation.Database`, a bounded
+prepared-plan cache, a worker pool, the cross-client fusion batcher, and
+any maintained views.  Query paths, fastest first:
+
+1. **warm cache** — a repeat shape finds its compiled
+   :class:`~repro.api.plan.Plan` in the :class:`~repro.serve.cache
+   .PlanCache` and goes straight to execution (prepare/compile skipped,
+   counter-verified in the tests);
+2. **fusion** — cacheable shapes pass through the
+   :class:`~repro.serve.batcher.FusionBatcher`, so compatible queries
+   landing within the window run as one contraction pass;
+3. **solo** — uncacheable shapes (anonymous predicates, engine
+   instances, mesh objects) compile fresh and run alone.
+
+Data registration is generational: ``register`` swaps in a *new*
+database (in-flight plans keep executing against the snapshot they were
+compiled on) and bumps the generation that keys the plan cache, so
+stale plans become unreachable and age out of the LRU rather than
+serving old data.
+
+``serve_tcp`` wraps a server in the newline-delimited JSON protocol of
+:mod:`repro.serve.wire` for the demo/CI clients.
+"""
+from __future__ import annotations
+
+import json
+import socketserver
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+
+from repro.relational.relation import Database, Relation
+from repro.serve import wire
+from repro.serve.batcher import FusionBatcher, _Pending, run_group
+from repro.serve.cache import PlanCache, plan_shape_key
+from repro.serve.views import ServedView
+
+
+class JoinAggServer:
+    """Concurrent JOIN-AGG service over a registered database."""
+
+    def __init__(
+        self,
+        db: Database | None = None,
+        *,
+        workers: int = 8,
+        plan_cache_size: int = 64,
+        fusion_window: float = 0.002,
+        fuse: bool = True,
+    ):
+        self._db = db if db is not None else Database()
+        self._generation = 0
+        self._db_lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="joinagg-worker"
+        )
+        self.plan_cache = PlanCache(plan_cache_size)
+        self._fuse = fuse
+        self._batcher = FusionBatcher(self._dispatch, window=fusion_window)
+        self._views: dict[str, ServedView] = {}
+        self._views_lock = threading.Lock()
+        self._closed = False
+
+    # -- data registration ---------------------------------------------
+    @property
+    def db(self) -> Database:
+        return self._db
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def register(self, name: str, columns) -> int:
+        """Register (or replace) a relation; returns the new generation.
+
+        The database is swapped, not mutated: queries already compiled
+        keep their snapshot, and the generation bump makes every cached
+        plan key unreachable so the next lookup recompiles on new data.
+        """
+        rel = columns if isinstance(columns, Relation) else Relation(
+            name, {a: c for a, c in wire.columns_from_json(columns).items()}
+            if isinstance(columns, dict) else dict(columns)
+        )
+        if rel.name != name:
+            rel = Relation(name, dict(rel.columns))
+        with self._db_lock:
+            new_db = Database(dict(self._db.relations))
+            new_db.add(rel)
+            self._db = new_db
+            self._generation += 1
+            return self._generation
+
+    # -- queries --------------------------------------------------------
+    def submit(self, spec) -> Future:
+        """Queue one query; resolves to its
+        :class:`~repro.api.plan.AggResult`."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        with self._db_lock:
+            generation = self._generation
+        key = plan_shape_key(spec, generation)
+        item = _Pending(spec=spec, shape_key=key, future=Future())
+        if self._fuse and key is not None:
+            self._batcher.submit(item)
+        else:
+            self._pool.submit(self._run_items, [item])
+        return item.future
+
+    def query(self, spec):
+        """Run one query to completion (blocking convenience wrapper)."""
+        return self.submit(spec).result()
+
+    def _dispatch(self, items: list[_Pending]) -> None:
+        self._pool.submit(self._run_items, items)
+
+    def _run_items(self, items: list[_Pending]) -> None:
+        run_group(items, self._lookup_plan, self._batcher.stats)
+
+    def _lookup_plan(self, spec):
+        with self._db_lock:
+            db, generation = self._db, self._generation
+        return self.plan_cache.lookup(spec, db, generation)
+
+    # -- maintained views -----------------------------------------------
+    def create_view(self, name: str, spec) -> ServedView:
+        """Compile ``spec``, hand it to the incremental-maintenance stack,
+        and serve it under ``name`` via epoch-swapped snapshots."""
+        plan = self._lookup_plan(spec)
+        handle = plan.maintain()
+        with self._views_lock:
+            if name in self._views:
+                raise ValueError(f"view {name!r} already exists")
+            view = self._views[name] = ServedView(name, handle)
+        return view
+
+    def view(self, name: str) -> ServedView:
+        with self._views_lock:
+            try:
+                return self._views[name]
+            except KeyError:
+                raise KeyError(f"no view named {name!r}") from None
+
+    def read_view(self, name: str):
+        return self.view(name).read()
+
+    def apply_view(self, name: str, op: str, rel: str, tuples) -> Future:
+        return self.view(name).apply(op, rel, tuples)
+
+    def drop_view(self, name: str) -> None:
+        with self._views_lock:
+            view = self._views.pop(name, None)
+        if view is not None:
+            view.close()
+
+    # -- introspection / lifecycle --------------------------------------
+    def stats(self) -> dict:
+        from repro.core import jax_engine
+
+        with self._views_lock:
+            views = {n: v.epoch for n, v in self._views.items()}
+        return {
+            "generation": self._generation,
+            "relations": sorted(self._db.relations),
+            "plan_cache": self.plan_cache.stats.snapshot(),
+            "fusion": self._batcher.stats.snapshot(),
+            "jit_cache": jax_engine.jit_cache_stats(),
+            "views": views,
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._batcher.close()
+        # the batcher's final flush handed stragglers to the pool
+        self._pool.shutdown(wait=True)
+        with self._views_lock:
+            views = list(self._views.values())
+            self._views.clear()
+        for v in views:
+            v.close()
+
+    def __enter__(self) -> "JoinAggServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ----------------------------------------------------------------------
+# TCP/JSON line frontend
+# ----------------------------------------------------------------------
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    """One client connection: newline-delimited JSON requests in, JSON
+    responses out (see :mod:`repro.serve.wire` for the schema)."""
+
+    def handle(self) -> None:
+        core: JoinAggServer = self.server.core  # type: ignore[attr-defined]
+        for raw in self.rfile:
+            line = raw.strip()
+            if not line:
+                continue
+            try:
+                req = json.loads(line)
+                resp = self._serve_one(core, req)
+                payload = json.dumps(resp, separators=(",", ":")) + "\n"
+            except Exception as e:  # malformed request / failed query
+                resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+                payload = json.dumps(resp, separators=(",", ":")) + "\n"
+            try:
+                self.wfile.write(payload.encode("utf-8"))
+                self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                return
+
+    def _serve_one(self, core: JoinAggServer, req: dict) -> dict:
+        op = req.get("op")
+        if op == "ping":
+            return {"ok": True, "pong": True}
+        if op == "query":
+            spec = wire.q_from_spec(req["q"])
+            return {"ok": True, "result": wire.result_to_json(core.query(spec))}
+        if op == "register":
+            gen = core.register(req["name"], req["columns"])
+            return {"ok": True, "generation": gen}
+        if op == "view_create":
+            view = core.create_view(req["name"], wire.q_from_spec(req["q"]))
+            return {"ok": True, "epoch": view.epoch}
+        if op == "view_read":
+            snap = core.read_view(req["name"])
+            res = snap.result
+            if isinstance(res, dict):
+                body = {
+                    "kind": "dict",
+                    "rows": [
+                        [[wire.plain(x) for x in k], wire.plain(v)]
+                        for k, v in sorted(res.items())
+                    ],
+                }
+            else:
+                body = {"kind": "agg", **wire.result_to_json(res)}
+            return {"ok": True, "epoch": snap.epoch, "result": body}
+        if op == "view_apply":
+            delta = req["delta"]
+            fut = core.apply_view(
+                req["name"], delta["op"], delta["rel"],
+                wire.columns_from_json(delta["columns"]),
+            )
+            return {"ok": True, "epoch": fut.result()}
+        if op == "stats":
+            return {"ok": True, "stats": core.stats()}
+        raise ValueError(f"unknown op {op!r}")
+
+
+class _TCPServer(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, addr, core: JoinAggServer):
+        self.core = core
+        super().__init__(addr, _Handler)
+
+
+def serve_tcp(
+    core: JoinAggServer, host: str = "127.0.0.1", port: int = 0
+) -> tuple[_TCPServer, threading.Thread]:
+    """Expose ``core`` over TCP; returns the socket server (its
+    ``server_address`` carries the bound port when ``port=0``) and the
+    accept-loop thread.  Call ``server.shutdown()`` to stop."""
+    srv = _TCPServer((host, port), core)
+    thread = threading.Thread(
+        target=srv.serve_forever, name="joinagg-tcp", daemon=True
+    )
+    thread.start()
+    return srv, thread

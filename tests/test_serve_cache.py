@@ -1,0 +1,217 @@
+"""Shared LRU + prepared-plan cache (DESIGN.md §9, serve/cache.py)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Count, Sum
+from repro.api.builder import Q
+from repro.data.synth import chain
+from repro.serve.cache import LRUCache, PlanCache, plan_shape_key
+
+
+@pytest.fixture(scope="module")
+def db():
+    d, _ = chain("C1", 300, seed=0)
+    rng = np.random.default_rng(1)
+    r2 = d["R2"]
+    d.add(r2.with_column("w", rng.integers(1, 50, r2.num_rows)))
+    return d
+
+
+def base_q():
+    return Q.over("R1", "R2", "R3", "R4").group_by("R1.g1").agg(n=Count())
+
+
+# ----------------------------------------------------------------------
+# LRUCache
+# ----------------------------------------------------------------------
+
+
+def test_lru_evicts_coldest_and_counts():
+    c = LRUCache(2, name="t")
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1  # refresh a: b is now coldest
+    c.put("c", 3)  # evicts b
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.get("b") is None
+    s = c.stats.snapshot()
+    assert s == {"hits": 1, "misses": 1, "evictions": 1, "inserts": 3}
+
+
+def test_lru_put_existing_key_refreshes_without_insert():
+    c = LRUCache(2, name="t")
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("a", 10)  # overwrite refreshes recency, no new insert
+    c.put("c", 3)  # so b (coldest) goes
+    assert c.get("a") == 10 and "b" not in c
+    assert c.stats.inserts == 3 and c.stats.evictions == 1
+
+
+def test_lru_setdefault_counts_hit_only_when_present():
+    c = LRUCache(4, name="t")
+    assert c.setdefault("k", 1) == 1
+    assert c.setdefault("k", 2) == 1
+    assert c.stats.hits == 1 and c.stats.inserts == 1
+
+
+def test_get_or_create_builds_once_under_contention():
+    c = LRUCache(8, name="t")
+    builds = []
+    start = threading.Barrier(8)
+
+    def factory():
+        builds.append(1)
+        return "value"
+
+    results = []
+
+    def worker():
+        start.wait()
+        results.append(c.get_or_create("k", factory))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == ["value"] * 8
+    assert len(builds) == 1  # the herd shared one factory run
+    assert c.stats.misses == 1 and c.stats.hits == 7
+
+
+def test_get_or_create_failure_releases_the_latch():
+    c = LRUCache(8, name="t")
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("factory failed")
+
+    with pytest.raises(RuntimeError):
+        c.get_or_create("k", boom)
+    # a later caller retries instead of deadlocking on the dead latch
+    assert c.get_or_create("k", lambda: 42) == 42
+    assert len(calls) == 1
+
+
+# ----------------------------------------------------------------------
+# plan_shape_key cacheability
+# ----------------------------------------------------------------------
+
+
+def test_shape_key_stable_and_generation_scoped():
+    k1 = plan_shape_key(base_q(), generation=0)
+    k2 = plan_shape_key(base_q(), generation=0)
+    assert k1 is not None and k1 == k2
+    assert plan_shape_key(base_q(), generation=1) != k1
+
+
+def test_shape_key_distinguishes_aggregates_and_options():
+    q = base_q()
+    assert plan_shape_key(q) != plan_shape_key(
+        Q.over("R1", "R2", "R3", "R4").group_by("R1.g1").agg(n=Sum("R2.w"))
+    )
+    assert plan_shape_key(q) != plan_shape_key(q.engine("jax"))
+    assert plan_shape_key(q) != plan_shape_key(q.mesh(2))
+
+
+def test_shape_key_keys_declarative_predicates():
+    qa = base_q().where("R2", "w", ">", 10)
+    qb = base_q().where("R2", "w", ">", 20)
+    ka, kb = plan_shape_key(qa), plan_shape_key(qb)
+    assert ka is not None and kb is not None and ka != kb
+
+
+def test_shape_key_rejects_callable_predicates():
+    # a lambda's label is just "<lambda>" — two distinct lambdas would
+    # collide, so callable-form predicates are uncacheable
+    assert plan_shape_key(base_q().where("R2", lambda c: c["w"] > 10)) is None
+
+    def w_positive(cols):
+        return cols["w"] > 0
+
+    assert plan_shape_key(base_q().where("R2", w_positive)) is None
+
+
+def test_shape_key_rejects_engine_instances_and_mesh_objects():
+    from repro.api.engines import resolve_engine
+
+    assert plan_shape_key(base_q().engine(resolve_engine("tensor"))) is None
+
+    class FakeMesh:
+        pass
+
+    assert plan_shape_key(base_q().mesh(FakeMesh())) is None
+
+
+# ----------------------------------------------------------------------
+# PlanCache
+# ----------------------------------------------------------------------
+
+
+def test_plan_cache_warm_hit_skips_compile(db):
+    pc = PlanCache(8)
+    p1 = pc.lookup(base_q(), db)
+    p2 = pc.lookup(base_q(), db)
+    assert p1 is p2  # the very same compiled plan object
+    s = pc.stats.snapshot()
+    assert s["compiles"] == 1 and s["hits"] == 1 and s["bypasses"] == 0
+    # and the cached plan still executes correctly
+    assert p2.execute().to_dict("n") == base_q().execute(db).to_dict("n")
+
+
+def test_plan_cache_generation_invalidates(db):
+    pc = PlanCache(8)
+    pc.lookup(base_q(), db, generation=0)
+    pc.lookup(base_q(), db, generation=1)
+    assert pc.stats.compiles == 2 and pc.stats.lru.hits == 0
+
+
+def test_plan_cache_bypasses_uncacheable(db):
+    pc = PlanCache(8)
+    q = base_q().where("R2", lambda c: c["w"] > 0)
+    r1, r2 = pc.lookup(q, db), pc.lookup(q, db)
+    assert r1 is not r2  # compiled fresh both times
+    assert pc.stats.bypasses == 2 and pc.stats.compiles == 2
+    assert len(pc) == 0
+
+
+# ----------------------------------------------------------------------
+# the bounded engine memos (satellite: no unbounded jit dicts)
+# ----------------------------------------------------------------------
+
+
+def test_jax_program_memos_are_bounded_lrus(db):
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.core import jax_engine
+
+    assert isinstance(jax_engine._FN_CACHE, LRUCache)
+    assert isinstance(jax_engine._JIT_CACHE, LRUCache)
+    assert jax_engine._FN_CACHE.maxsize == jax_engine._PROGRAM_CACHE_MAX
+
+    q = base_q().engine("jax")
+    before = jax_engine.jit_cache_stats()["jits"]
+    r1 = q.execute(db).to_dict("n")
+    mid = jax_engine.jit_cache_stats()["jits"]
+    r2 = q.execute(db).to_dict("n")
+    after = jax_engine.jit_cache_stats()["jits"]
+    assert r1 == r2
+    # at least one program was traced... and the repeat reused it
+    assert mid["inserts"] >= before["inserts"]
+    assert after["hits"] > mid["hits"] or after["inserts"] == mid["inserts"]
+    assert after["size"] <= jax_engine._PROGRAM_CACHE_MAX
+
+
+def test_prepared_program_memo_is_bounded(db):
+    from repro.api.plan import compile_plan
+
+    plan = compile_plan(base_q(), db)
+    cache = plan.prep._program_cache
+    assert isinstance(cache, LRUCache)
+    for i in range(cache.maxsize + 5):
+        cache.put(("fake", i), i)
+    assert len(cache) == cache.maxsize
+    assert cache.stats.evictions == 5

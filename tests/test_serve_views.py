@@ -1,0 +1,147 @@
+"""Maintained-view serving: epoch swap + torn-read stress
+(DESIGN.md §9, serve/views.py)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Count
+from repro.api.builder import Q
+from repro.api.plan import compile_plan
+from repro.data.synth import chain
+from repro.serve.server import JoinAggServer
+from repro.serve.views import ServedView
+
+
+def count_q():
+    return Q.over("R1", "R2", "R3", "R4").group_by("R1.g1").agg(n=Count())
+
+
+@pytest.fixture()
+def db():
+    d, _ = chain("C1", 250, seed=3)
+    return d
+
+
+def make_view(db, name="v"):
+    return ServedView(name, compile_plan(count_q(), db).maintain())
+
+
+def rand_batch(rng, size=6):
+    return {
+        "g1": rng.integers(0, 20, size),
+        "p0": rng.integers(0, 25, size),
+    }
+
+
+def test_epoch_swap_and_read_your_writes(db):
+    view = make_view(db)
+    try:
+        snap0 = view.read()
+        assert snap0.epoch == 0
+        rng = np.random.default_rng(0)
+        ep = view.insert("R1", rand_batch(rng)).result()
+        assert ep == 1
+        snap1 = view.read()
+        assert snap1.epoch == 1
+        assert snap1.result != snap0.result
+        # snapshots are immutable history: snap0 still holds epoch-0 data
+        assert snap0.epoch == 0
+    finally:
+        view.close()
+
+
+def test_snapshot_matches_batch_replay_oracle(db):
+    view = make_view(db)
+    shadow = compile_plan(count_q(), db).maintain()
+    rng = np.random.default_rng(1)
+    try:
+        for _ in range(5):
+            batch = rand_batch(rng)
+            ep = view.insert("R1", batch).result()
+            want = shadow.insert("R1", batch)
+            snap = view.read()
+            assert snap.epoch == ep
+            assert snap.as_dict() == want
+    finally:
+        view.close()
+
+
+def test_rejected_batch_leaves_epoch_and_snapshot_intact(db):
+    view = make_view(db)
+    try:
+        before = view.read()
+        fut = view.delete("R1", {"g1": np.array([9999]),
+                                 "p0": np.array([9999])})
+        with pytest.raises(Exception):
+            fut.result()  # over-delete of a tuple that was never inserted
+        after = view.read()
+        assert after.epoch == before.epoch
+        assert after.as_dict() == before.as_dict()
+    finally:
+        view.close()
+
+
+def test_concurrent_reads_always_see_a_delta_prefix(db):
+    """The satellite stress test: under a writer applying delta batches
+    and many spinning readers, every observed snapshot is bit-identical
+    to SOME batch prefix — never a torn intermediate (e.g. a half-grown
+    GrowableDictionary or a partially-propagated message cache)."""
+    n_batches = 30
+    rng = np.random.default_rng(2)
+    batches = [rand_batch(rng) for _ in range(n_batches)]
+
+    # prefix oracles: epoch e == replaying batches[:e] on a fresh handle
+    shadow = compile_plan(count_q(), db).maintain()
+    prefix = [shadow.result()]
+    for b in batches:
+        prefix.append(shadow.insert("R1", b))
+
+    view = make_view(db)
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        seen_epoch = -1
+        while not stop.is_set() or seen_epoch < n_batches:
+            snap = view.read()
+            if snap.as_dict() != prefix[snap.epoch]:
+                bad.append(snap.epoch)
+                return
+            seen_epoch = max(seen_epoch, snap.epoch)
+            if seen_epoch >= n_batches:
+                return
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    try:
+        last = None
+        for b in batches:
+            last = view.insert("R1", b)
+        assert last.result() == n_batches == view.drain()
+        stop.set()
+        for t in readers:
+            t.join(timeout=30)
+        assert not bad, f"torn reads at epochs {bad}"
+        assert view.read().epoch == n_batches
+        assert view.read().as_dict() == prefix[n_batches]
+    finally:
+        stop.set()
+        view.close()
+
+
+def test_server_view_lifecycle(db):
+    with JoinAggServer(db, workers=2) as srv:
+        view = srv.create_view("by_g1", count_q())
+        assert srv.read_view("by_g1").epoch == 0
+        with pytest.raises(ValueError, match="already exists"):
+            srv.create_view("by_g1", count_q())
+        rng = np.random.default_rng(4)
+        ep = srv.apply_view("by_g1", "insert", "R1", rand_batch(rng)).result()
+        assert ep == 1 and srv.stats()["views"] == {"by_g1": 1}
+        with pytest.raises(ValueError, match="insert/delete"):
+            view.apply("upsert", "R1", rand_batch(rng))
+        srv.drop_view("by_g1")
+        with pytest.raises(KeyError):
+            srv.read_view("by_g1")
