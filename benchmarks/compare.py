@@ -118,6 +118,40 @@ def distributed_delta_lines(fresh: dict[str, dict]) -> list[str]:
     return lines
 
 
+def estimation_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-13 planner A/B + cost-model estimation accuracy (max
+    q-error of estimated vs actual per-node cardinalities) as markdown."""
+    tabs = sorted(
+        {
+            n.split(",")[1]
+            for n in fresh
+            if n.startswith("table13,") and n.endswith(",estimation")
+        }
+    )
+    if not tabs:
+        return ["_no table-13 records in this run_"]
+    lines = [
+        "| workload | byte peak (MB) | stats peak (MB) | ratio | splits "
+        "| max q-error |",
+        "|---|---:|---:|---:|---:|---:|",
+    ]
+    worst = 0.0
+    for w in tabs:
+        byte = fresh.get(f"table13,{w},byte_heuristic")
+        stat = fresh.get(f"table13,{w},stats_planner")
+        est = fresh.get(f"table13,{w},estimation")
+        q = derived_field(est, "max_qerr")
+        worst = max(worst, float(q) if q is not None else 0.0)
+        lines.append(
+            f"| {w} | {derived_field(byte, 'peak_mb')} "
+            f"| {derived_field(stat, 'peak_mb')} "
+            f"| {derived_field(stat, 'peak_ratio')}x "
+            f"| {derived_field(stat, 'splits')} | {q} |"
+        )
+    lines.append(f"\nworst per-node cardinality q-error: **{worst:.2f}**")
+    return lines
+
+
 def serving_delta_lines(fresh: dict[str, dict]) -> list[str]:
     """Table-12 serving latency / cache / fusion summary as markdown."""
     cold = fresh.get("table12,SERVE,cold_query")
@@ -177,11 +211,25 @@ def main(argv: list[str] | None = None) -> int:
 
     base = load_records(args.baseline)
     fresh = load_records(args.fresh)
+    # a baseline table entirely absent from the fresh run means that
+    # bench silently stopped running — fail loudly instead of letting
+    # the shared-records intersection hide it forever
+    missing = sorted(
+        {table_of(n) for n in base} - {table_of(n) for n in fresh},
+        key=lambda t: (len(t), t),
+    )
     shared = {
         n for n in set(base) & set(fresh)
         if base[n]["us_per_call"] > 0 and fresh[n]["us_per_call"] > 0
     }
     if not shared:
+        if missing:
+            print(
+                "compare: baseline tables missing from the fresh run: "
+                + ", ".join(missing),
+                file=sys.stderr, flush=True,
+            )
+            return 1
         print("compare: no shared timed records; nothing to gate", flush=True)
         return 0
 
@@ -192,7 +240,10 @@ def main(argv: list[str] | None = None) -> int:
     speed = fresh_all / max(base_all, 1e-9)
 
     rows = []
-    failures = []
+    failures = [
+        f"{table}: present in baseline but missing from the fresh run"
+        for table in missing
+    ]
     for table in sorted(base_tot, key=lambda t: (len(t), t)):
         # leave-one-out normalization: the machine-speed ratio excludes
         # the table under test, so a regression in a time-dominant table
@@ -235,6 +286,10 @@ def main(argv: list[str] | None = None) -> int:
         "",
         *serving_delta_lines(fresh),
         "",
+        "### Statistics-driven planner (table 13)",
+        "",
+        *estimation_lines(fresh),
+        "",
     ]
     if failures:
         md += ["### Failures", ""] + [f"- {f}" for f in failures]
@@ -248,8 +303,9 @@ def main(argv: list[str] | None = None) -> int:
 
     if failures:
         print(
-            f"compare: {len(failures)} table(s) regressed beyond "
-            f"{args.threshold:.0%}", file=sys.stderr, flush=True,
+            f"compare: {len(failures)} failing table(s) — regressed beyond "
+            f"{args.threshold:.0%} or missing from the fresh run",
+            file=sys.stderr, flush=True,
         )
         return 1
     print("compare: perf gate green", flush=True)

@@ -1,0 +1,117 @@
+"""Plan-choice golden gate (DESIGN.md §10).
+
+Renders ``Plan.explain(actuals=True)`` for every catalog query
+(``repro.data.queries``: REAL + CYCLIC + SKEWED) at a tiny fixed scale
+and compares against the checked-in snapshots in
+``tests/goldens/plans/``.  The explain output carries every planner
+decision — engine, root, GHD bag tree, stats summary, split ranges, jax
+dense/sparse path, per-node byte + cardinality estimates — so any code
+change that flips a plan choice shows up as a golden diff and fails CI
+until the snapshot is regenerated *deliberately*:
+
+    python -m benchmarks.plan_goldens --write   # regenerate snapshots
+    python -m benchmarks.plan_goldens --check   # CI gate (default)
+
+Scales are small enough to run in seconds yet large enough that the
+skew/sparsity thresholds trigger exactly as they do at bench scale.
+"""
+from __future__ import annotations
+
+import argparse
+import difflib
+import sys
+from pathlib import Path
+
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "goldens" / "plans"
+
+# per-catalog row counts: fixed forever — changing them rewrites history
+SCALES = {"REAL": 600, "CYCLIC": 300, "SKEWED": 600}
+ENGINE = "jax"  # the engine with the richest plan surface (path choice)
+
+
+def catalog() -> dict[str, tuple[str, object]]:
+    from repro.data.queries import CYCLIC, REAL, SKEWED
+
+    out: dict[str, tuple[str, object]] = {}
+    for group, cat in (("REAL", REAL), ("CYCLIC", CYCLIC), ("SKEWED", SKEWED)):
+        for name, gen in sorted(cat.items()):
+            out[name] = (group, gen)
+    return out
+
+
+def render(name: str, group: str, gen) -> str:
+    from repro.api.builder import Q
+
+    n = SCALES[group]
+    db, q = gen(n, seed=0)
+    plan = Q.from_query(q).engine(ENGINE).plan(db)
+    header = f"# plan golden: {name} ({group}, n={n}, engine={ENGINE})\n"
+    return header + plan.explain(actuals=True) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument(
+        "--write", action="store_true", help="regenerate every snapshot"
+    )
+    mode.add_argument(
+        "--check", action="store_true", help="diff against snapshots (default)"
+    )
+    ap.add_argument("--only", default=None, help="restrict to one query name")
+    args = ap.parse_args(argv)
+
+    entries = catalog()
+    if args.only:
+        if args.only not in entries:
+            print(f"unknown query {args.only!r}; have {sorted(entries)}")
+            return 2
+        entries = {args.only: entries[args.only]}
+
+    if args.write:
+        GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+        for name, (group, gen) in entries.items():
+            path = GOLDEN_DIR / f"{name}.txt"
+            path.write_text(render(name, group, gen))
+            print(f"wrote {path}")
+        return 0
+
+    stale: list[str] = []
+    for name, (group, gen) in entries.items():
+        path = GOLDEN_DIR / f"{name}.txt"
+        fresh = render(name, group, gen)
+        if not path.exists():
+            stale.append(name)
+            print(f"MISSING golden for {name}: {path}")
+            continue
+        golden = path.read_text()
+        if golden != fresh:
+            stale.append(name)
+            diff = difflib.unified_diff(
+                golden.splitlines(keepends=True),
+                fresh.splitlines(keepends=True),
+                fromfile=f"golden/{name}.txt",
+                tofile=f"fresh/{name}",
+            )
+            sys.stdout.writelines(diff)
+            print()
+    if not args.only:
+        known = {f"{n}.txt" for n in catalog()}
+        for extra in sorted(GOLDEN_DIR.glob("*.txt")):
+            if extra.name not in known:
+                stale.append(extra.name)
+                print(f"ORPHAN golden {extra} (no catalog query produces it)")
+    if stale:
+        print(
+            f"plan goldens: {len(stale)} stale/missing snapshot(s): "
+            f"{sorted(stale)}\n"
+            "a plan choice changed — if intended, regenerate with:\n"
+            "    python -m benchmarks.plan_goldens --write"
+        )
+        return 1
+    print(f"plan goldens: {len(entries)} snapshot(s) match")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,7 @@ import argparse
 
 from benchmarks import common, tables
 
-TABLES = ["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12"]
+TABLES = ["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13"]
 
 
 def main() -> None:
@@ -60,6 +60,8 @@ def main() -> None:
         tables.table11_distributed(n_chain, verify)
     if run_all or args.table == "12":
         tables.table12_serving(n_chain, verify)
+    if run_all or args.table == "13":
+        tables.table13_planner(n_real, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
 

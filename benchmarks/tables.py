@@ -684,3 +684,70 @@ def table12_serving(n: int, verify: bool) -> None:
             f"table12: cross-client fusion sped repeated-shape load up only "
             f"{speedup:.2f}x over serial (expected >= 1.5x)"
         )
+
+
+def table13_planner(n: int, verify: bool) -> None:
+    """Table XIII — statistics-driven planner (DESIGN.md §10): the
+    skewed-chain A/B.  The byte-heuristic plan (``Q.stats(False)``) runs
+    the dense contraction over the full skewed join-key domain; the
+    statistics-driven plan detects the heavy hitter, splits the key space
+    into heavy singletons + light chunks, and executes per range.
+
+    Emits measured (tracemalloc) peak bytes for both plans plus the cost
+    model's estimation accuracy (max q-error of estimated vs actual
+    per-node message cardinalities).  When verifying: the split plan must
+    measure ≥2× below the byte-heuristic plan's peak and both must match
+    the tensor oracle exactly.
+    """
+    from repro.api.builder import Q
+    from repro.core.tensor_engine import execute_tensor
+    from repro.data.queries import SKEWED
+    from repro.planner.cost import actual_node_cards, node_card_estimates, qerror
+
+    for name, gen in SKEWED.items():
+        db, q = gen(n, seed=0)
+        plan_b = Q.from_query(q).stats(False).plan(db)
+        plan_s = Q.from_query(q).plan(db)
+        if plan_s.split is None:
+            raise AssertionError(
+                f"table13,{name}: stats planner found no qualifying skew"
+            )
+        if plan_b.split is not None:
+            raise AssertionError(
+                f"table13,{name}: byte-heuristic plan must not split"
+            )
+        (res_b, mem_b), t_b = timed(peak_memory, plan_b.execute)
+        (res_s, mem_s), t_s = timed(peak_memory, plan_s.execute)
+        ratio = mem_b / max(mem_s, 1)
+        emit(
+            f"table13,{name},byte_heuristic", t_b,
+            f"peak_mb={mem_b / 1e6:.2f};groups={res_b.num_rows}",
+        )
+        emit(
+            f"table13,{name},stats_planner", t_s,
+            f"peak_mb={mem_s / 1e6:.2f};splits={plan_s.split.num_splits};"
+            f"heavy_keys={len(plan_s.split.heavy)};peak_ratio={ratio:.2f}",
+        )
+        ests = node_card_estimates(plan_s.prep, plan_s.prep.stats)
+        acts, t_est = timed(actual_node_cards, plan_s.prep)
+        max_q = max(qerror(ests[r], acts[r]) for r in ests)
+        emit(
+            f"table13,{name},estimation", t_est,
+            f"max_qerr={max_q:.2f};nodes={len(ests)}",
+        )
+        if verify:
+            oracle = execute_tensor(q, db)
+            d_s, d_b = res_s.to_dict(), res_b.to_dict()
+            if d_s != oracle:
+                raise AssertionError(
+                    f"table13,{name}: split plan diverged from tensor oracle"
+                )
+            if d_b != oracle:
+                raise AssertionError(
+                    f"table13,{name}: byte plan diverged from tensor oracle"
+                )
+            if ratio < 2.0:
+                raise AssertionError(
+                    f"table13,{name}: stats plan cut measured peak only "
+                    f"{ratio:.2f}x below the byte heuristic (expected >= 2x)"
+                )

@@ -63,6 +63,7 @@ class Q:
     budget: int | None = None
     stream_opt: tuple[str, int] | None = None
     mesh_opt: "object | None" = None  # jax Mesh or shard count
+    stats_opt: bool = True  # statistics-driven planning (DESIGN.md §10)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -204,6 +205,12 @@ class Q:
         the root group attribute's CSR row ranges are partitioned
         one-per-device (DESIGN.md §8)."""
         return replace(self, mesh_opt=mesh)
+
+    def stats(self, enabled: bool = True) -> "Q":
+        """Toggle statistics-driven planning (DESIGN.md §10).  When off,
+        root choice falls back to the dense-bytes heuristic and per-split
+        plans are disabled — the baseline side of the planner A/B."""
+        return replace(self, stats_opt=bool(enabled))
 
     # ------------------------------------------------------------------
     def plan(self, db: Database) -> Plan:

@@ -132,6 +132,12 @@ class Plan:
     # device mesh (jax.sharding.Mesh or a shard count) from Q.mesh();
     # execute(mesh=...) overrides per call
     mesh: "object | None" = None
+    # per-split execution decision (repro.planner.split.SplitDecision)
+    # when the stats layer found qualifying skew; None = unsplit plan
+    split: "object | None" = None
+    # False when the spec disabled statistics-driven planning (byte
+    # heuristics only — the baseline side of the table-13 A/B)
+    stats_enabled: bool = True
 
     # ------------------------------------------------------------------
     def _require_physical(self) -> None:
@@ -150,7 +156,15 @@ class Plan:
     def est_peak(self) -> int:
         if self.ghd_plan is not None:
             return max(self.ghd_plan.bag_peak_bytes, self.message_peak)
+        if self.split is not None:
+            return self.split.est_split_peak
         return self.message_peak
+
+    @property
+    def stats(self):
+        """Collected statistics (lazy; see ``Prepared.stats``)."""
+        self._require_physical()
+        return self.prep.stats
 
     def _resolved_stream(self) -> tuple[str, int] | None:
         """The tile plan actually used: the explicit ``stream`` option, or
@@ -204,6 +218,13 @@ class Plan:
                 )
             kwargs["mesh"] = mesh
             kwargs.pop("memory_budget", None)  # sharding IS the bound
+        if self.split is not None and mesh is None:
+            from repro.planner.split import execute_split
+
+            return _assemble(
+                self,
+                execute_split(self.prep, self.split, self.engine, self.channels),
+            )
         outputs = self.engine.run(
             self.prep,
             self.channels,
@@ -253,8 +274,12 @@ class Plan:
         return out
 
     # ------------------------------------------------------------------
-    def explain(self) -> str:
-        """Human-readable plan: strategy, root, rewrites, per-node peaks."""
+    def explain(self, actuals: bool = False) -> str:
+        """Human-readable plan: strategy, root, stats, rewrites, per-node
+        peaks with estimated cardinalities.  ``actuals=True`` additionally
+        runs one boolean tensor pass and renders measured per-node message
+        cardinalities next to the estimates (golden/bench scales only —
+        it allocates the dense messages)."""
         self._require_physical()
         prep = self.prep
         lines = [
@@ -291,6 +316,22 @@ class Plan:
                 f"(memory budget "
                 f"{_fmt_bytes(self.memory_budget or DEFAULT_MEMORY_BUDGET)})"
             )
+        if not self.stats_enabled:
+            lines.append("stats: disabled (byte-heuristic planning)")
+        else:
+            st = self.prep.stats
+            lines.append(
+                f"stats: generation {st.generation}, "
+                f"{len(st.relations)} relation(s) sketched, "
+                f"{len(st.fanouts)} sampled fanout(s)"
+            )
+            lines.extend(f"  {t}" for t in st.summary_lines())
+            if self.split is not None:
+                lines.append(f"split: {self.split.describe()}")
+                for (lo, hi), root in zip(self.split.ranges, self.split.roots):
+                    lines.append(f"  [{lo},{hi}) root={root}")
+            elif not self.cyclic and not meshed:
+                lines.append("split: none (no qualifying skew)")
         if self.engine.name == "jax":
             lines.extend(self._explain_jax_path(stream))
         lines.append(
@@ -307,8 +348,16 @@ class Plan:
             lines.append("rejected roots:")
             for note in self.root_notes:
                 lines.append(f"  {note}")
+        cards = None
+        acts = None
+        if self.stats_enabled:
+            from repro.planner.cost import actual_node_cards, node_card_estimates
+
+            cards = node_card_estimates(prep, prep.stats)
+            if actuals:
+                acts = actual_node_cards(prep)
         lines.append("tree:")
-        lines.extend("  " + t for t in _render_tree(prep))
+        lines.extend("  " + t for t in _render_tree(prep, cards, acts))
         if prep.folded:
             folds = ", ".join(f"{f}->{prep.fold_hosts[f]}" for f in prep.folded)
             lines.append(f"  folded: {folds}")
@@ -335,6 +384,7 @@ class Plan:
                 if ch.kind == "sum" and ch.measure
             ),
             shards=shards,
+            stats=self.prep.stats if self.stats_enabled else None,
         )
         if choice.path == "distributed-sparse":
             lines = [
@@ -394,17 +444,31 @@ def _fmt_bytes(n: int) -> str:
     raise AssertionError
 
 
-def _render_tree(prep: Prepared) -> list[str]:
+def _render_tree(
+    prep: Prepared,
+    cards: dict[str, float] | None = None,
+    actuals: dict[str, int] | None = None,
+) -> list[str]:
     sizes = node_message_bytes(prep)
     deco = prep.decomposition
-    lines = [f"{deco.root} (root)  msg {_fmt_bytes(sizes[deco.root])}"]
+
+    def annotate(rel: str) -> str:
+        text = f"{rel}  msg {_fmt_bytes(sizes[rel])}"
+        if cards is not None:
+            text += f"  est {cards[rel]:.0f} rows"
+            if actuals is not None:
+                text += f" / actual {actuals[rel]} rows"
+        return text
+
+    root_note = annotate(deco.root).replace("  msg", " (root)  msg", 1)
+    lines = [root_note]
 
     def walk(rel: str, prefix: str) -> None:
         kids = deco.nodes[rel].children
         for i, c in enumerate(kids):
             last = i == len(kids) - 1
             glyph = "└─ " if last else "├─ "
-            lines.append(prefix + glyph + f"{c}  msg {_fmt_bytes(sizes[c])}")
+            lines.append(prefix + glyph + annotate(c))
             walk(c, prefix + ("   " if last else "│  "))
 
     walk(deco.root, "")
@@ -492,12 +556,14 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
     if clash:
         raise ValueError(f"aggregate names collide with group columns: {sorted(clash)}")
 
+    stats_on = bool(getattr(spec, "stats_opt", True))
     ghd_plan = None
     prep = None
     root_notes: tuple[str, ...] = ()
     channels: tuple[Channel, ...] = ()
     minmax: tuple[MinMaxRequest, ...] = ()
     assemble: dict[str, tuple] = {}
+    split = None
     if physical:
         if cyclic:
             ghd_plan = compile_ghd(query0, edb, measures=measures)
@@ -509,12 +575,30 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
                 return prep.measure_moves.get(rel, rel)
 
         else:
-            prep, root_notes = _best_root(query0, edb, measures)
+            prep, root_notes = _best_root(query0, edb, measures, use_stats=stats_on)
 
             def resolve_rel(rel: str) -> str:
                 return prep.measure_moves.get(rel, rel)
 
         channels, minmax, assemble = _channelize(aggs, resolve_rel)
+        if (
+            stats_on
+            and not cyclic
+            and not minmax
+            and spec.stream_opt is None
+            and getattr(spec, "mesh_opt", None) is None
+            and engine.name in ("tensor", "jax")
+        ):
+            from repro.planner.split import decide_split
+
+            split = decide_split(prep, prep.stats)
+            if split is not None:
+                budget = (
+                    spec.budget if spec.budget is not None else DEFAULT_MEMORY_BUDGET
+                )
+                if split.est_split_peak > budget:
+                    # split cannot fit either; fall back to streaming
+                    split = None
 
     return Plan(
         spec=spec,
@@ -534,6 +618,8 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         stream=spec.stream_opt,
         root_notes=root_notes,
         mesh=getattr(spec, "mesh_opt", None),
+        split=split,
+        stats_enabled=stats_on,
     )
 
 
@@ -632,15 +718,21 @@ def _copy_joining_group_attrs(rel_names, edb: Database, group_by, notes: list[st
 
 
 def _best_root(
-    query: JoinAggQuery, db: Database, measures: dict[str, str]
+    query: JoinAggQuery,
+    db: Database,
+    measures: dict[str, str],
+    use_stats: bool = True,
 ) -> tuple[Prepared, tuple[str, ...]]:
     """Cost-based root search: encode once, fold/decompose per candidate
-    group-relation root, keep the minimum estimated peak message.  Every
-    rejected root's reason is kept for ``explain()`` and errors."""
+    group-relation root, rank by the statistics-refined cost model
+    (:func:`repro.planner.cost.plan_cost`) — or the raw dense-bytes
+    heuristic when ``use_stats`` is off.  Every rejected root's reason is
+    kept for ``explain()`` and errors."""
     schema = resolve_schema(query, db)
     dicts, encoded = encode_query(query, db, schema, measures=measures)
-    best: tuple[Prepared, int] | None = None
+    best: tuple[Prepared, tuple] | None = None
     failures: list[str] = []
+    stats = None
     for root in dict.fromkeys(r for r, _ in query.group_by):
         try:
             p = finish_prepare(
@@ -649,9 +741,20 @@ def _best_root(
         except ValueError as e:
             failures.append(f"{root}: {e}")
             continue
-        peak = peak_message_bytes(p)
-        if best is None or peak < best[1]:
-            best = (p, peak)
+        if use_stats:
+            from repro.planner.cost import plan_cost
+
+            if stats is None:
+                # fold/encode are root-independent: the first candidate's
+                # statistics describe every candidate's encodings
+                stats = p.stats
+            else:
+                p.attach_stats(stats)
+            cost: tuple = plan_cost(p, stats)
+        else:
+            cost = (peak_message_bytes(p),)
+        if best is None or cost < best[1]:
+            best = (p, cost)
     if best is None:
         detail = "; ".join(failures) if failures else "no candidates"
         raise ValueError(f"no valid group-relation root ({detail})")

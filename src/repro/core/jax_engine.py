@@ -726,6 +726,7 @@ def choose_jax_path(
     stream: tuple[str, int] | None = None,
     measured: tuple[str, ...] = (),
     shards: int | None = None,
+    stats=None,
 ) -> JaxPathChoice:
     """Estimate per-node dense-vs-sparse peak bytes and pick the path.
 
@@ -744,9 +745,19 @@ def choose_jax_path(
     and fills ``per_device_node_bytes``: edge arrays and messages that
     carry the shard attribute divide by the shard count, replicated
     subtrees keep their full size (DESIGN.md §8).
+
+    ``stats`` (a :class:`repro.stats.Statistics`, defaulting to the
+    prepared plan's cached collection when one was materialized) refines
+    two decisions: the per-device divisor caps at the shard attribute's
+    heavy-hitter share (a skewed key pins its rows to one device, so
+    dividing by the full shard count under-estimates the hot device),
+    and a dense tensor whose estimated occupancy is extreme-sparse
+    prefers the sparse program even under budget.
     """
     from repro.core.operator import DEFAULT_MEMORY_BUDGET, node_message_bytes
 
+    if stats is None:
+        stats = getattr(prep, "_stats_cache", None)
     budget = DEFAULT_MEMORY_BUDGET if memory_budget is None else memory_budget
     measured_set = {m for m in measured if m}
     dense_msg_k = k if measured_set else 1  # all-COUNT: one scalar einsum
@@ -771,21 +782,41 @@ def choose_jax_path(
 
         attr = shard_attr(prep)
         msg_attrs = _node_message_attrs(prep)
+        # skew caps the useful divisor: a heavy key's rows all land on one
+        # device, so the hot shard holds at least max_share of the edges
+        div = shards
+        skew_note = ""
+        if stats is not None:
+            share = max(
+                (
+                    stats.max_share(rel, attr)
+                    for rel, er in prep.encoded.items()
+                    if attr in er.attrs
+                ),
+                default=0.0,
+            )
+            if share > 0.0:
+                div = min(shards, max(1, int(1.0 / share)))
+                if div < shards:
+                    skew_note = (
+                        f"; skew-capped divisor {div} "
+                        f"(top share {share:.2f} of {attr!r})"
+                    )
         per_dev: dict[str, int] = {}
         for rel, er in prep.encoded.items():
             edge_bytes = er.codes.nbytes + 4 * k * er.num_rows
             if attr in er.attrs:
-                edge_bytes //= shards
+                edge_bytes //= div
             msg_f32 = (msg[rel] // 2) * k
             if attr in msg_attrs[rel]:
-                msg_f32 //= shards
+                msg_f32 //= div
             per_dev[rel] = edge_bytes + msg_f32
         choice.path = "distributed-sparse"
         choice.shards = shards
         choice.per_device_node_bytes = per_dev
         choice.reason = (
             f"mesh over {shards} shard(s) of {attr!r} on the data axis "
-            "(dense einsum is retired on meshes)"
+            "(dense einsum is retired on meshes)" + skew_note
         )
         return choice
     if stream is not None:
@@ -801,8 +832,41 @@ def choose_jax_path(
         choice.reason = (
             f"dense program needs {choice.dense_peak} B > budget {budget} B"
         )
+    elif (sparse := _extreme_sparsity(prep, stats)) is not None:
+        choice.path = "sparse"
+        choice.reason = (
+            f"stats: dense tensor for {sparse[0]!r} is extreme-sparse "
+            f"(est occupancy {sparse[1]:.2e})"
+        )
     else:
         choice.reason = (
             f"dense program fits ({choice.dense_peak} B ≤ budget {budget} B)"
         )
     return choice
+
+
+# dense tensors this large with occupancy this low waste both the
+# materialization and the einsum FLOPs; the CSR program touches only edges
+SPARSITY_MIN_ELEMS = 1 << 20
+SPARSITY_MAX_OCCUPANCY = 1e-3
+
+
+def _extreme_sparsity(prep: Prepared, stats) -> tuple[str, float] | None:
+    """Largest relation whose dense tensor's estimated occupancy (weighted
+    rows / dense cells) is below ``SPARSITY_MAX_OCCUPANCY`` — ``None``
+    when statistics are absent or no tensor qualifies."""
+    if stats is None:
+        return None
+    worst: tuple[str, float] | None = None
+    for rel, er in prep.encoded.items():
+        elems = 1
+        for a in er.attrs:
+            elems *= prep.dicts[a].size
+        if elems < SPARSITY_MIN_ELEMS:
+            continue
+        rs = stats.relations.get(rel)
+        rows = rs.rows if rs is not None else er.num_rows
+        occ = max(rows, 1) / elems
+        if occ < SPARSITY_MAX_OCCUPANCY and (worst is None or occ < worst[1]):
+            worst = (rel, occ)
+    return worst

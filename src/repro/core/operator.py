@@ -86,32 +86,46 @@ def estimate_plan(
 
 
 def choose_root(query: JoinAggQuery, db: Database) -> tuple[Prepared, int]:
-    """Cost-based root choice: minimize estimated peak message memory.
+    """Cost-based root choice over the statistics-refined cost model
+    (DESIGN.md §10): candidates are ranked by
+    :func:`repro.planner.cost.plan_cost` — dense message bytes plus an
+    estimated-cardinality work term from the collected sketches — and
+    the returned peak stays in ``peak_message_bytes`` currency (it feeds
+    the streaming fallback's tile arithmetic).
 
     Mirrors the paper's freedom to 'start from any group relation'
     (Section III-A) made cost-based."""
     from repro.ghd.rewrite import is_cyclic_query
+    from repro.planner.cost import plan_cost
 
     if is_cyclic_query(query, db):
         # the GHD compiler optimizes the bag-tree root internally
         return estimate_plan(query, db)
-    best: tuple[Prepared, int] | None = None
+    best: tuple[Prepared, tuple[float, float]] | None = None
     group_rels = {r for r, _ in query.group_by}
     failures: list[str] = []
+    stats = None
     for root in query.relations:
         if root not in group_rels:
             continue
         try:
-            prep, peak = estimate_plan(query, db, root=root)
+            prep, _ = estimate_plan(query, db, root=root)
         except ValueError as e:
             failures.append(f"{root}: {e}")
             continue
-        if best is None or peak < best[1]:
-            best = (prep, peak)
+        if stats is None:
+            # the fold rewrite is root-independent, so one candidate's
+            # statistics describe every candidate's encodings
+            stats = prep.stats
+        else:
+            prep.attach_stats(stats)
+        cost = plan_cost(prep, stats)
+        if best is None or cost < best[1]:
+            best = (prep, cost)
     if best is None:
         detail = "; ".join(failures) if failures else "no group relation in query"
         raise ValueError(f"no valid group-relation root ({detail})")
-    return best
+    return best[0], peak_message_bytes(best[0])
 
 
 def run_tensor(

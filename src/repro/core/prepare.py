@@ -121,6 +121,24 @@ class Prepared:
         # executable, so the memo gets LRU eviction + counters instead of
         # growing with every distinct (channels, mesh) ever requested.
         self._program_cache = LRUCache(16, name="prepared-programs")
+        # lazily collected statistics (repro.stats); None until the
+        # planner (or a caller) first touches .stats, so preparation cost
+        # is unchanged for paths that never consult the cost model
+        self._stats_cache = None
+
+    @property
+    def stats(self):
+        """Collected :class:`~repro.stats.collect.Statistics` over the
+        (post-fold) encoded relations — lazy, cached, shareable via
+        :meth:`attach_stats` across same-encoding candidate roots."""
+        if self._stats_cache is None:
+            from repro.stats.collect import collect_statistics
+
+            self._stats_cache = collect_statistics(self.encoded, self.dicts)
+        return self._stats_cache
+
+    def attach_stats(self, stats) -> None:
+        self._stats_cache = stats
 
     @property
     def group_attrs(self) -> tuple[tuple[str, str], ...]:

@@ -139,6 +139,7 @@ def _candidate_orders(
     attrs: list[str],
     edges: dict[str, frozenset[str]],
     domains: dict[str, int],
+    group_attrs: frozenset[str] = frozenset(),
 ):
     if len(attrs) <= EXHAUSTIVE_MAX_ATTRS:
         yield from itertools.permutations(attrs)
@@ -171,6 +172,13 @@ def _candidate_orders(
     yield greedy(lambda a, adj, left: len(adj[a] & left))  # min-degree
     yield greedy(fill_in)  # min-fill
     yield greedy(lambda a, adj, left: (occ[a], domains.get(a, 1)))  # private/small first
+    if group_attrs:
+        # AJAR-style aggregate-aware order: eliminate aggregated-away
+        # attrs first so group attrs (which must survive to the output)
+        # sit near the root and avoid widening the interior bags
+        yield greedy(
+            lambda a, adj, left: (a in group_attrs, len(adj[a] & left))
+        )
     rng = random.Random(0)
     for _ in range(N_RANDOM_ORDERS):
         perm = list(attrs)
@@ -192,10 +200,11 @@ def build_ghd(
     allows one group attribute per relation)."""
     all_attrs = sorted({a for e in edges.values() for a in e})
     group_of = group_of or {}
+    group_attrs = frozenset(group_of.values())
 
     best: tuple[tuple, dict, dict] | None = None
     seen_trees: set[frozenset] = set()
-    for order in _candidate_orders(all_attrs, edges, domains):
+    for order in _candidate_orders(all_attrs, edges, domains, group_attrs):
         raw = _eliminate(list(order), edges)
         battrs, bparent = _raw_tree(raw)
         sig = frozenset(frozenset(v) for v in battrs.values())
@@ -206,7 +215,15 @@ def build_ghd(
             i: _bag_estimate(frozenset(v), edges, domains, rows)
             for i, v in battrs.items()
         }
-        cost = (max(ests.values()), sum(ests.values()), len(battrs))
+        # aggregate-aware (AJAR-style) component: bags carrying group
+        # attrs become output-carrying messages in the derived acyclic
+        # plan, so their estimated size is weighted separately — between
+        # trees tied on (max, sum), prefer the one keeping group-attr
+        # bags small
+        gpen = sum(
+            est for i, est in ests.items() if battrs[i] & group_attrs
+        )
+        cost = (max(ests.values()), sum(ests.values()), gpen, len(battrs))
         if best is None or cost < best[0]:
             best = (cost, battrs, bparent)
     assert best is not None

@@ -81,6 +81,26 @@ class GHDPlan:
         return self.ghd.max_est_elems
 
 
+def _effective_domains(
+    domains: dict[str, int], encoded: dict[str, EncodedRelation]
+) -> dict[str, int]:
+    """Statistics-refined attr domains for bag-size estimation: cap each
+    dictionary size by the attr's sketched distinct count in every
+    relation carrying it (exact below the sketch capacity — a join can
+    only keep codes present on both sides), so the elimination-order
+    search scores bags with the domains the data actually populates."""
+    from repro.stats.sketches import DistinctSketch
+
+    eff = dict(domains)
+    for er in encoded.values():
+        for i, a in enumerate(er.attrs):
+            if a not in eff or er.num_rows == 0:
+                continue
+            est = DistinctSketch().update(er.codes[:, i]).estimate()
+            eff[a] = min(eff[a], max(1, int(est)))
+    return eff
+
+
 def _append_copy_column(bt: BagTable, src: str, copy: str) -> BagTable:
     i = bt.attrs.index(src)
     codes = np.concatenate([bt.codes, bt.codes[:, i : i + 1]], axis=1)
@@ -121,7 +141,10 @@ def compile_ghd(
     edges = {r: frozenset(schema.relevant[r]) for r in query.relations}
     domains = {a: dicts[a].size for attrs in edges.values() for a in attrs}
     rows = {r: encoded[r].num_rows for r in query.relations}
-    ghd = build_ghd(edges, domains, rows, group_of=schema.group_of)
+    ghd = build_ghd(
+        edges, _effective_domains(domains, encoded), rows,
+        group_of=schema.group_of,
+    )
 
     measure_bag: dict[str, str] = {}
     for m_rel in measures:
@@ -226,6 +249,7 @@ def compile_ghd(
         )
     else:
         best: tuple[Prepared, int] | None = None
+        failures: list[str] = []
         # sorted: peak ties must not depend on set (string-hash) order,
         # or the chosen root varies across processes
         for cand in sorted({b for b, _ in derived_group_by}):
@@ -234,13 +258,19 @@ def compile_ghd(
                     derived_query, schema_d, dicts_d, encoded_d, root=cand,
                     measures=derived_measures,
                 )
-            except ValueError:
+            except ValueError as e:
+                failures.append(f"{cand}: {e}")
                 continue
             peak = peak_message_bytes(p)
             if best is None or peak < best[1]:
                 best = (p, peak)
         if best is None:
-            raise ValueError("no valid group-relation root for the bag tree")
+            detail = (
+                "; ".join(failures) if failures else "no group-relation bags"
+            )
+            raise ValueError(
+                f"no valid group-relation root for the bag tree ({detail})"
+            )
         prep = best[0]
 
     bag_peak = max((bt.peak_bytes for bt in bag_tables.values()), default=0)

@@ -233,6 +233,7 @@ class MaintainedJoinAgg:
         self.base[rel].apply(delta)
         if raw_applies and sign > 0:
             self._update_raw(cols, sign)
+        self._maintain_stats(rel, delta, sign)
 
         if self.cyclic:
             self._refresh_cyclic(rel)
@@ -245,6 +246,26 @@ class MaintainedJoinAgg:
         else:
             self._refresh_propagate(rel, delta)
         return self.result()
+
+    def _maintain_stats(self, rel: str, delta, sign: int) -> None:
+        """Keep the prepared plan's collected statistics (DESIGN.md §10)
+        current under deltas — only when a planner already materialized
+        them: inserts merge the delta's sketches in (mergeability is the
+        point of the sketch layer), deletes recollect the one relation
+        (sketches cannot subtract).  Either path bumps the statistics
+        ``generation``, so plan caches keyed on it invalidate."""
+        stats = getattr(self.prep, "_stats_cache", None)
+        if stats is None or rel not in stats.relations:
+            return
+        if sign > 0:
+            from repro.relational.encoding import EncodedRelation
+
+            stats.apply_insert(
+                rel,
+                EncodedRelation(rel, delta.attrs, delta.codes, delta.count, {}),
+            )
+        else:
+            stats.refresh_relation(rel, self.base[rel].er)
 
     # --- dirty-path propagation (COUNT/SUM/AVG on tensor/jax) ---------
     def _refresh_propagate(self, rel: str, delta: DeltaBatch) -> None:

@@ -1,0 +1,26 @@
+"""Statistics-driven cost model + per-split planning (DESIGN.md §10)."""
+from repro.planner.cost import (
+    actual_node_cards,
+    node_card_estimates,
+    plan_cost,
+    qerror,
+)
+from repro.planner.split import (
+    SPLIT_MIN_BENEFIT,
+    SPLIT_MIN_SHARE,
+    SplitDecision,
+    decide_split,
+    execute_split,
+)
+
+__all__ = [
+    "SPLIT_MIN_BENEFIT",
+    "SPLIT_MIN_SHARE",
+    "SplitDecision",
+    "actual_node_cards",
+    "decide_split",
+    "execute_split",
+    "node_card_estimates",
+    "plan_cost",
+    "qerror",
+]

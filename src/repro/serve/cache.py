@@ -161,16 +161,19 @@ class LRUCache:
 # ----------------------------------------------------------------------
 
 
-def plan_shape_key(spec, generation: int = 0):
+def plan_shape_key(spec, generation: int = 0, stats_generation: int = 0):
     """Hashable shape of a :class:`~repro.api.builder.Q` spec, or ``None``
     when the query cannot be cached safely.
 
     The key captures everything the compiled plan depends on: relations
     (with aliases), column renames, pushed-down predicate labels, group
     attributes, the named-aggregate bundle (name, kind, measure), engine
-    name, memory budget / stream options, the mesh shard count, and the
+    name, memory budget / stream options, the mesh shard count, the
     server's data ``generation`` (bumped on every relation registration,
-    so stale plans become unreachable and age out of the LRU).
+    so stale plans become unreachable and age out of the LRU), and the
+    ``stats_generation`` of the statistics layer plus the spec's own
+    stats toggle — a stats bump invalidates every cached plan whose root
+    / split choices were made on the old sketches (DESIGN.md §10).
 
     Uncacheable shapes — ``None`` is returned — are those whose identity
     the label cannot prove: callable predicates (the label is just the
@@ -204,6 +207,8 @@ def plan_shape_key(spec, generation: int = 0):
         spec.budget,
         spec.stream_opt,
         mesh,
+        stats_generation,
+        bool(getattr(spec, "stats_opt", True)),
     )
 
 
@@ -239,10 +244,10 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._lru)
 
-    def lookup(self, spec, db, generation: int = 0):
+    def lookup(self, spec, db, generation: int = 0, stats_generation: int = 0):
         from repro.api.plan import compile_plan
 
-        key = plan_shape_key(spec, generation)
+        key = plan_shape_key(spec, generation, stats_generation)
         if key is None:
             self.stats.bypasses += 1
             self.stats.compiles += 1

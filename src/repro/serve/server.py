@@ -52,6 +52,10 @@ class JoinAggServer:
     ):
         self._db = db if db is not None else Database()
         self._generation = 0
+        # bumped whenever the statistics a cached plan was chosen on may
+        # have changed (every registration changes the data the sketches
+        # would be collected from); keys the plan cache (DESIGN.md §10)
+        self._stats_generation = 0
         self._db_lock = threading.Lock()
         self._pool = ThreadPoolExecutor(
             max_workers=workers, thread_name_prefix="joinagg-worker"
@@ -72,6 +76,18 @@ class JoinAggServer:
     def generation(self) -> int:
         return self._generation
 
+    @property
+    def stats_generation(self) -> int:
+        return self._stats_generation
+
+    def bump_stats(self) -> int:
+        """Invalidate cached plans after an out-of-band statistics
+        refresh (e.g. a maintained view's deltas drifted the sketches the
+        planner chose roots/splits on)."""
+        with self._db_lock:
+            self._stats_generation += 1
+            return self._stats_generation
+
     def register(self, name: str, columns) -> int:
         """Register (or replace) a relation; returns the new generation.
 
@@ -90,6 +106,7 @@ class JoinAggServer:
             new_db.add(rel)
             self._db = new_db
             self._generation += 1
+            self._stats_generation += 1
             return self._generation
 
     # -- queries --------------------------------------------------------
@@ -100,7 +117,8 @@ class JoinAggServer:
             raise RuntimeError("server is closed")
         with self._db_lock:
             generation = self._generation
-        key = plan_shape_key(spec, generation)
+            stats_gen = self._stats_generation
+        key = plan_shape_key(spec, generation, stats_gen)
         item = _Pending(spec=spec, shape_key=key, future=Future())
         if self._fuse and key is not None:
             self._batcher.submit(item)
@@ -121,7 +139,8 @@ class JoinAggServer:
     def _lookup_plan(self, spec):
         with self._db_lock:
             db, generation = self._db, self._generation
-        return self.plan_cache.lookup(spec, db, generation)
+            stats_gen = self._stats_generation
+        return self.plan_cache.lookup(spec, db, generation, stats_gen)
 
     # -- maintained views -----------------------------------------------
     def create_view(self, name: str, spec) -> ServedView:
@@ -162,6 +181,7 @@ class JoinAggServer:
             views = {n: v.epoch for n, v in self._views.items()}
         return {
             "generation": self._generation,
+            "stats_generation": self._stats_generation,
             "relations": sorted(self._db.relations),
             "plan_cache": self.plan_cache.stats.snapshot(),
             "fusion": self._batcher.stats.snapshot(),

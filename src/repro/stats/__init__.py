@@ -1,0 +1,18 @@
+"""Statistics layer: mergeable sketches + collection (DESIGN.md §10)."""
+from repro.stats.collect import (
+    ColumnStats,
+    RelationStats,
+    Statistics,
+    collect_statistics,
+)
+from repro.stats.sketches import DistinctSketch, HeavyHitterSketch, splitmix64
+
+__all__ = [
+    "ColumnStats",
+    "DistinctSketch",
+    "HeavyHitterSketch",
+    "RelationStats",
+    "Statistics",
+    "collect_statistics",
+    "splitmix64",
+]

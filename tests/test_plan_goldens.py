@@ -1,0 +1,37 @@
+"""Tier-1 wrapper around the plan-choice golden gate.
+
+Runs ``python -m benchmarks.plan_goldens --check`` in a subprocess (so
+the jax platform pin takes effect before jax initializes, mirroring
+``run_in_virtual_mesh``) and fails with the full diff output if any
+snapshot is stale.  Regenerate deliberately with::
+
+    python -m benchmarks.plan_goldens --write
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from tests.conftest import REPO_ROOT
+
+
+def test_plan_goldens_match():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.plan_goldens", "--check"],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO_ROOT,
+        timeout=600,
+    )
+    assert res.returncode == 0, (
+        "plan goldens are stale — a planner decision changed; if intended, "
+        "regenerate with `python -m benchmarks.plan_goldens --write`\n"
+        f"{res.stdout[-6000:]}\n{res.stderr[-2000:]}"
+    )

@@ -1,0 +1,258 @@
+"""Statistics-driven planner (DESIGN.md §10): cost model, per-split
+execution, failure-reason surfacing, and plan-cache invalidation."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api.builder import Q
+from repro.core.query import JoinAggQuery
+from repro.core.tensor_engine import execute_tensor
+from repro.planner.cost import (
+    actual_node_cards,
+    node_card_estimates,
+    plan_cost,
+    qerror,
+)
+from repro.planner.split import decide_split
+from repro.relational.relation import Database, Relation
+
+
+def _skewed_db(n=600, seed=0, heavy=0.3, dom=None):
+    """R1(g1, p0) ⋈ R2(p0, g2) with a hot p0 key on both sides."""
+    rng = np.random.default_rng(seed)
+    dom = dom or 2 * n
+    db = Database()
+    db.add(
+        Relation(
+            "R1",
+            {
+                "g1": rng.integers(0, 8, n),
+                "p0": np.where(rng.random(n) < heavy, 0, rng.integers(0, dom, n)),
+            },
+        )
+    )
+    db.add(
+        Relation(
+            "R2",
+            {
+                "p0": np.where(rng.random(n) < heavy, 0, rng.integers(0, dom, n)),
+                "g2": rng.integers(0, 8, n),
+            },
+        )
+    )
+    q = JoinAggQuery(("R1", "R2"), (("R1", "g1"), ("R2", "g2")))
+    return db, q
+
+
+def _uniform_db(n=300, seed=1):
+    rng = np.random.default_rng(seed)
+    db = Database()
+    db.add(Relation("R1", {"g1": rng.integers(0, 6, n), "p0": rng.integers(0, 20, n)}))
+    db.add(Relation("R2", {"p0": rng.integers(0, 20, n), "g2": rng.integers(0, 6, n)}))
+    q = JoinAggQuery(("R1", "R2"), (("R1", "g1"), ("R2", "g2")))
+    return db, q
+
+
+# ----------------------------------------------------------------------
+# cost model
+# ----------------------------------------------------------------------
+
+
+def test_card_estimates_bracket_actuals():
+    db, q = _skewed_db()
+    plan = Q.from_query(q).plan(db)
+    ests = node_card_estimates(plan.prep, plan.prep.stats)
+    acts = actual_node_cards(plan.prep)
+    assert set(ests) == set(acts) == set(plan.prep.encoded)
+    for rel in ests:
+        assert ests[rel] >= 1.0
+        # sketched estimates on a 2-relation chain stay within 4x
+        assert qerror(ests[rel], acts[rel]) <= 4.0
+
+
+def test_plan_cost_orders_roots_consistently():
+    db, q = _skewed_db()
+    plan = Q.from_query(q).plan(db)
+    stats = plan.prep.stats
+    cost = plan_cost(plan.prep, stats)
+    assert len(cost) == 2 and cost[0] > 0 and cost[1] >= cost[0]
+
+
+def test_qerror_floor_and_symmetry():
+    assert qerror(10.0, 10) == 1.0
+    assert qerror(5.0, 20) == qerror(20.0, 5) == 4.0
+    assert qerror(0.0, 0) == 1.0
+
+
+# ----------------------------------------------------------------------
+# per-split planning + execution
+# ----------------------------------------------------------------------
+
+
+def test_split_plan_bit_identical_to_unsplit_and_oracle():
+    db, q = _skewed_db()
+    stats_plan = Q.from_query(q).plan(db)
+    byte_plan = Q.from_query(q).stats(False).plan(db)
+    assert stats_plan.split is not None, "skewed workload must split"
+    assert byte_plan.split is None, "stats(False) must never split"
+    d_s = stats_plan.execute().to_dict()
+    d_b = byte_plan.execute().to_dict()
+    oracle = execute_tensor(q, db)
+    assert d_s == d_b == oracle  # exact ==: integer counts in f64
+
+
+def test_split_estimates_beat_unsplit():
+    db, q = _skewed_db()
+    plan = Q.from_query(q).plan(db)
+    dec = plan.split
+    assert dec is not None
+    assert dec.est_split_peak * 2 <= dec.est_unsplit_peak
+    assert plan.est_peak == dec.est_split_peak
+    # ranges partition [0, dom) exactly
+    dom = plan.prep.dicts[dec.attr].size
+    covered = sorted(dec.ranges)
+    assert covered[0][0] == 0 and covered[-1][1] == dom
+    for (a, b), (c, _) in zip(covered, covered[1:]):
+        assert b == c, "ranges must tile the code space without gaps"
+    assert any(hi - lo == 1 for lo, hi in dec.ranges), "heavy singleton"
+
+
+def test_no_split_without_skew():
+    db, q = _uniform_db()
+    plan = Q.from_query(q).plan(db)
+    assert plan.split is None  # domain below SPLIT_MIN_DOMAIN, no skew
+    assert decide_split(plan.prep, plan.prep.stats) is None
+
+
+def test_split_on_jax_engine_matches_tensor():
+    db, q = _skewed_db(n=400)
+    jplan = Q.from_query(q).engine("jax").plan(db)
+    assert jplan.split is not None
+    jd = jplan.execute().to_dict()
+    oracle = execute_tensor(q, db)
+    assert set(jd) == set(oracle)
+    for k, v in oracle.items():
+        assert jd[k] == pytest.approx(v)  # f32 channel math on jax
+
+
+def test_minmax_disables_split():
+    from repro.aggregates.semiring import Min
+
+    db, q = _skewed_db()
+    rng = np.random.default_rng(3)
+    r1 = db["R1"]
+    db.add(r1.with_column("w", rng.integers(1, 50, r1.num_rows)))
+    plan = (
+        Q.over("R1", "R2")
+        .group_by("R1.g1", "R2.g2")
+        .agg(lo=Min("R1.w"))
+        .plan(db)
+    )
+    assert plan.split is None  # MIN is not additive across key ranges
+
+
+# ----------------------------------------------------------------------
+# explain surface
+# ----------------------------------------------------------------------
+
+
+def test_explain_renders_stats_and_split():
+    db, q = _skewed_db()
+    text = Q.from_query(q).plan(db).explain()
+    assert "stats: generation 0" in text
+    assert "sampled fanout" in text
+    assert "split: 'p0' into" in text
+    assert "est" in text and "rows" in text
+
+
+def test_explain_actuals_and_disabled_stats():
+    db, q = _skewed_db()
+    text = Q.from_query(q).plan(db).explain(actuals=True)
+    assert "/ actual" in text
+    off = Q.from_query(q).stats(False).plan(db).explain()
+    assert "stats: disabled (byte-heuristic planning)" in off
+    assert "est" not in off.split("tree:")[1]
+
+
+# ----------------------------------------------------------------------
+# failure-reason surfacing (regression: reasons were dropped when every
+# GHD bag-tree root failed)
+# ----------------------------------------------------------------------
+
+
+def test_ghd_root_failures_are_surfaced(monkeypatch):
+    import repro.ghd.rewrite as rewrite
+    from repro.data.queries import triangle_like
+
+    db, q = triangle_like(200, seed=0)
+
+    def boom(*args, **kwargs):
+        raise ValueError("synthetic per-root failure")
+
+    monkeypatch.setattr(rewrite, "finish_prepare", boom)
+    with pytest.raises(ValueError) as ei:
+        rewrite.compile_ghd(q, db)
+    msg = str(ei.value)
+    assert "no valid group-relation root for the bag tree" in msg
+    assert "synthetic per-root failure" in msg  # the collected reason
+    assert "bag" in msg  # names the failing candidate
+
+
+# ----------------------------------------------------------------------
+# serving: stats generation invalidates cached plans
+# ----------------------------------------------------------------------
+
+
+def test_plan_cache_keys_on_stats_generation():
+    from repro.serve.cache import plan_shape_key
+
+    db, q = _skewed_db(n=200)
+    spec = Q.from_query(q)
+    k1 = plan_shape_key(spec, generation=1, stats_generation=1)
+    k2 = plan_shape_key(spec, generation=1, stats_generation=1)
+    k3 = plan_shape_key(spec, generation=1, stats_generation=2)
+    assert k1 == k2
+    assert k1 != k3
+    assert plan_shape_key(spec.stats(False), 1, 1) != k1
+
+
+def test_server_bump_stats_recompiles():
+    from repro.serve.server import JoinAggServer
+
+    db, q = _skewed_db(n=200)
+    spec = Q.from_query(q)
+    with JoinAggServer(db, workers=2, fuse=False) as srv:
+        srv.query(spec)
+        srv.query(spec)
+        assert srv.plan_cache.stats.compiles == 1  # warm hit
+        srv.bump_stats()
+        srv.query(spec)
+        assert srv.plan_cache.stats.compiles == 2  # invalidated
+        assert srv.stats()["stats_generation"] == srv.stats_generation
+
+
+# ----------------------------------------------------------------------
+# incremental maintenance keeps stats current
+# ----------------------------------------------------------------------
+
+
+def test_maintained_deltas_update_stats():
+    from repro.stats.collect import collect_statistics
+
+    db, q = _skewed_db(n=300)
+    plan = Q.from_query(q).plan(db)
+    handle = Q.from_query(q).maintain(db)
+    # materialize the maintainer's stats cache, as a planner would
+    stats = handle.prep.stats
+    gen0 = stats.generation
+    rows0 = stats.relations["R1"].rows
+    handle.insert("R1", {"g1": [3, 4, 5], "p0": [0, 0, 1]})
+    assert stats.generation == gen0 + 1
+    assert stats.relations["R1"].rows == rows0 + 3
+    handle.delete("R1", {"g1": [3], "p0": [0]})
+    assert stats.generation == gen0 + 2
+    assert stats.relations["R1"].rows == rows0 + 2
+    # deltas on the hot key keep the heavy hitter visible
+    assert stats.max_share("R1", "p0") > 0.2
+    del plan, collect_statistics

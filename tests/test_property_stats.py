@@ -1,0 +1,115 @@
+"""Property tests (hypothesis): the statistics sketches honour their
+advertised guarantees on arbitrary integer streams, weights, and merge
+trees — KMV exactness below k and merge associativity, Misra-Gries
+under-count bounds and heavy-hitter recall (DESIGN.md §10)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # many randomized examples; run via `-m slow`
+
+from repro.stats.sketches import DistinctSketch, HeavyHitterSketch
+
+KEYS = st.integers(min_value=-(2**40), max_value=2**40)
+STREAM = st.lists(KEYS, min_size=0, max_size=300)
+
+
+@given(values=st.lists(KEYS, min_size=0, max_size=60), k=st.integers(4, 512))
+@settings(max_examples=200, derandomize=True)
+def test_kmv_exact_while_below_k(values, k):
+    distinct = len(set(values))
+    hypothesis.assume(distinct < k)
+    sk = DistinctSketch(k=k).update(np.array(values, dtype=np.int64))
+    assert sk.is_exact
+    assert sk.estimate() == float(distinct)
+
+
+@given(a=STREAM, b=STREAM, c=STREAM, k=st.sampled_from([4, 16, 64]))
+@settings(max_examples=200, derandomize=True)
+def test_kmv_merge_associative_commutative_and_stream_equivalent(a, b, c, k):
+    def sk(vals):
+        return DistinctSketch(k=k).update(np.array(vals, dtype=np.int64))
+
+    sa, sb, sc = sk(a), sk(b), sk(c)
+    left = sa.merge(sb).merge(sc)
+    right = sa.merge(sb.merge(sc))
+    assert left.state() == right.state()
+    assert sa.merge(sb).state() == sb.merge(sa).state()
+    # merging partitions == one pass over the concatenated stream
+    assert left.state() == sk(a + b + c).state()
+
+
+@given(values=STREAM, m=st.integers(1, 24))
+@settings(max_examples=200, derandomize=True)
+def test_mg_undercount_bounds(values, m):
+    arr = np.array(values, dtype=np.int64)
+    sk = HeavyHitterSketch(m=m).update(arr)
+    assert sk.n == len(values)
+    assert 0 <= sk.err <= sk.n / (m + 1)
+    keys, counts = np.unique(arr, return_counts=True) if len(arr) else ([], [])
+    for key, true in zip(keys, counts):
+        est = sk.estimate(int(key))
+        assert est <= true
+        assert true - est <= sk.err
+    # no phantom keys: every tracked key occurred in the stream
+    assert set(sk.counts) <= set(int(k) for k in keys)
+
+
+@given(
+    values=st.lists(KEYS, min_size=1, max_size=300),
+    m=st.integers(1, 24),
+    min_share=st.floats(0.05, 0.9),
+)
+@settings(max_examples=200, derandomize=True)
+def test_mg_heavy_hitter_recall(values, m, min_share):
+    arr = np.array(values, dtype=np.int64)
+    sk = HeavyHitterSketch(m=m).update(arr)
+    reported = {k for k, _ in sk.heavy(min_share)}
+    keys, counts = np.unique(arr, return_counts=True)
+    for key, true in zip(keys, counts):
+        # guaranteed recall: true share beyond min_share + err/n
+        if true / sk.n > min_share + sk.err / sk.n:
+            assert int(key) in reported
+
+
+@given(
+    values=st.lists(KEYS, min_size=1, max_size=300),
+    cuts=st.lists(st.integers(0, 300), min_size=0, max_size=4),
+    m=st.sampled_from([1, 4, 12]),
+)
+@settings(max_examples=200, derandomize=True)
+def test_mg_bounds_survive_any_partitioning(values, cuts, m):
+    arr = np.array(values, dtype=np.int64)
+    points = sorted(c % (len(values) + 1) for c in cuts)
+    parts = np.split(arr, points)
+    merged = HeavyHitterSketch(m=m)
+    for part in parts:
+        merged = merged.merge(HeavyHitterSketch(m=m).update(part))
+    assert merged.n == len(values)
+    assert merged.err <= merged.n / (m + 1)
+    keys, counts = np.unique(arr, return_counts=True)
+    for key, true in zip(keys, counts):
+        est = merged.estimate(int(key))
+        assert est <= true and true - est <= merged.err
+
+
+@given(
+    keys=st.lists(KEYS, min_size=1, max_size=40, unique=True),
+    weights=st.lists(st.integers(1, 50), min_size=1, max_size=40),
+    m=st.integers(1, 16),
+)
+@settings(max_examples=200, derandomize=True)
+def test_mg_weighted_equals_repeated(keys, weights, m):
+    size = min(len(keys), len(weights))
+    keys, weights = keys[:size], weights[:size]
+    wtd = HeavyHitterSketch(m=m).update(
+        np.array(keys, dtype=np.int64), weights=np.array(weights)
+    )
+    rep = HeavyHitterSketch(m=m).update(
+        np.repeat(np.array(keys, dtype=np.int64), weights)
+    )
+    assert wtd.n == rep.n == sum(weights)
+    # same single-batch input: identical retained state, not just bounds
+    assert wtd.counts == rep.counts and wtd.err == rep.err

@@ -1,0 +1,108 @@
+"""Deterministic sketch unit tests (DESIGN.md §10).
+
+Exact-regime behaviour, advertised error bounds on fixed seeds, and
+merge semantics — the randomized-input counterparts live in
+``test_property_stats.py`` (hypothesis, ``-m slow``)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.stats.sketches import DistinctSketch, HeavyHitterSketch, splitmix64
+
+
+def test_splitmix64_is_deterministic_and_injective_on_small_ints():
+    v = np.arange(10_000)
+    h1, h2 = splitmix64(v), splitmix64(v)
+    assert np.array_equal(h1, h2)
+    assert h1.dtype == np.uint64
+    assert len(np.unique(h1)) == len(v)  # no collisions on tiny domains
+
+
+def test_kmv_exact_below_k():
+    sk = DistinctSketch(k=64)
+    sk.update(np.array([1, 2, 3, 2, 1]))
+    assert sk.is_exact
+    assert sk.estimate() == 3.0
+    sk.update(np.arange(50))  # 0..49 plus {1,2,3} already seen
+    assert sk.is_exact
+    assert sk.estimate() == 50.0
+
+
+def test_kmv_estimate_within_advertised_bound():
+    rng = np.random.default_rng(7)
+    true = 20_000
+    sk = DistinctSketch(k=256).update(rng.permutation(true))
+    assert not sk.is_exact
+    rel = abs(sk.estimate() - true) / true
+    assert rel <= sk.error_bound()
+
+
+def test_kmv_merge_equals_single_stream():
+    rng = np.random.default_rng(11)
+    data = rng.integers(0, 5_000, 8_000)
+    whole = DistinctSketch(k=128).update(data)
+    a = DistinctSketch(k=128).update(data[:3_000])
+    b = DistinctSketch(k=128).update(data[3_000:])
+    assert a.merge(b).state() == whole.state()
+    assert b.merge(a).state() == whole.state()  # commutative
+
+
+def test_kmv_constructor_and_merge_validation():
+    with pytest.raises(ValueError, match="k >= 4"):
+        DistinctSketch(k=3)
+    with pytest.raises(ValueError, match="cannot merge"):
+        DistinctSketch(k=16).merge(DistinctSketch(k=32))
+
+
+def test_mg_bounds_on_skewed_stream():
+    rng = np.random.default_rng(3)
+    stream = np.concatenate([np.zeros(400, dtype=int), rng.integers(1, 200, 600)])
+    sk = HeavyHitterSketch(m=8).update(stream)
+    true = dict(zip(*np.unique(stream, return_counts=True)))
+    assert sk.n == len(stream)
+    assert sk.err <= sk.n / (sk.m + 1)
+    for key, t in true.items():
+        est = sk.estimate(int(key))
+        assert est <= t
+        assert t - est <= sk.err
+    # the 40%-share hot key must be retained with a near-true share
+    assert sk.max_share() >= 0.4 - sk.err / sk.n
+    assert sk.heavy(0.2)[0][0] == 0
+
+
+def test_mg_weighted_update_matches_repetition():
+    rep = HeavyHitterSketch(m=4).update(np.array([5, 5, 5, 9]))
+    wtd = HeavyHitterSketch(m=4).update(
+        np.array([5, 9]), weights=np.array([3, 1])
+    )
+    assert rep.n == wtd.n == 4
+    assert rep.estimate(5) == wtd.estimate(5) == 3
+    assert rep.top(2) == wtd.top(2)
+
+
+def test_mg_merge_preserves_bounds():
+    rng = np.random.default_rng(5)
+    stream = np.concatenate([np.full(300, 7), rng.integers(0, 50, 700)])
+    parts = np.array_split(stream, 4)
+    merged = HeavyHitterSketch(m=6)
+    for part in parts:
+        merged = merged.merge(HeavyHitterSketch(m=6).update(part))
+    true = dict(zip(*np.unique(stream, return_counts=True)))
+    assert merged.n == len(stream)
+    assert merged.err <= merged.n / (merged.m + 1)
+    for key, t in true.items():
+        est = merged.estimate(int(key))
+        assert est <= t and t - est <= merged.err
+    assert merged.heavy(0.25)[0][0] == 7
+
+
+def test_mg_constructor_and_merge_validation():
+    with pytest.raises(ValueError, match="m >= 1"):
+        HeavyHitterSketch(m=0)
+    with pytest.raises(ValueError, match="cannot merge"):
+        HeavyHitterSketch(m=4).merge(HeavyHitterSketch(m=8))
+    empty = HeavyHitterSketch(m=4)
+    assert empty.max_share() == 0.0
+    assert empty.heavy(0.1) == []
+    assert empty.update(np.empty(0, dtype=int)).n == 0
