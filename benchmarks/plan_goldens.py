@@ -45,6 +45,7 @@ def render(name: str, group: str, gen) -> str:
     n = SCALES[group]
     db, q = gen(n, seed=0)
     plan = Q.from_query(q).engine(ENGINE).plan(db)
+    plan.verify()  # every golden plan must be invariant-clean (DESIGN.md §11)
     header = f"# plan golden: {name} ({group}, n={n}, engine={ENGINE})\n"
     return header + plan.explain(actuals=True) + "\n"
 

@@ -1,0 +1,35 @@
+"""Static analysis for the JOIN-AGG stack (DESIGN.md §11).
+
+Two halves, both proving soundness *before* anything runs:
+
+* :mod:`repro.analysis.verify` — a plan-invariant verifier that walks
+  any compiled :class:`~repro.api.plan.Plan` (and the programs hanging
+  off it: sparse, distributed, GHD) and checks the structural invariants
+  the whole materialization-free evaluation rests on — running
+  intersection, semiring-channel wiring, exact disjoint split/shard
+  partitions, sentinel non-aliasing, accumulator-overflow headroom.
+  Exposed as ``Plan.verify()`` and as a ``REPRO_VERIFY=1`` debug-mode
+  assert inside ``compile_plan``.
+* :mod:`repro.analysis.lint` — an AST lint suite with repo-specific
+  rules (``python -m repro.analysis --check src tests``): host calls and
+  data-dependent branching inside jitted regions, block-size arithmetic
+  that assumes even tiling, and a ``# guarded-by: <lock>`` lock
+  discipline checker for the serving layer.
+"""
+from repro.analysis.verify import (
+    Diagnostic,
+    PlanInvariantError,
+    verify_distributed_program,
+    verify_ghd_plan,
+    verify_plan,
+    verify_sparse_program,
+)
+
+__all__ = [
+    "Diagnostic",
+    "PlanInvariantError",
+    "verify_plan",
+    "verify_sparse_program",
+    "verify_distributed_program",
+    "verify_ghd_plan",
+]

@@ -1,0 +1,93 @@
+"""CLI for the static-analysis suite.
+
+``python -m repro.analysis --check src tests``
+    AST-lint the given files/directories (default: ``src``); print
+    findings as ``path:line:col: CODE message`` and exit 1 on any.
+
+``python -m repro.analysis --verify-catalog``
+    Compile every catalog query at golden scales and run the plan
+    verifier over each (plus a mesh=8 distributed variant and the
+    SKEWCHAIN per-split plan); exit 1 on any diagnostic.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import lint_paths
+
+# golden scales — mirror benchmarks/plan_goldens.py so the verified
+# plans are the same ones the plan-choice gate snapshots
+_SCALES = {"REAL": 600, "CYCLIC": 300, "SKEWED": 600}
+
+
+def _verify_catalog() -> int:
+    from repro.api.builder import Q
+    from repro.data.queries import CYCLIC, REAL, SKEWED
+
+    failures = 0
+    for group, cat in (("REAL", REAL), ("CYCLIC", CYCLIC), ("SKEWED", SKEWED)):
+        for name, gen in sorted(cat.items()):
+            db, q = gen(_SCALES[group], seed=0)
+            plan = Q.from_query(q).engine("jax").plan(db)
+            diags = plan.verify(strict=False)
+            for d in diags:
+                failures += 1
+                print(f"catalog[{name}]: {d}")
+            if not diags:
+                nodes = len(plan.prep.decomposition.order)
+                print(f"catalog[{name}]: ok ({nodes} nodes)")
+            if name == "SKEWCHAIN" and plan.split is None:
+                failures += 1
+                print(
+                    "catalog[SKEWCHAIN]: expected a per-split plan at "
+                    "golden scale but the planner chose an unsplit one"
+                )
+
+    # a distributed (mesh=8) variant of an acyclic catalog query: the
+    # shard-partition + tile invariants only bind when mesh is set
+    db, q = REAL["TPCH"](_SCALES["REAL"], seed=0)
+    plan = Q.from_query(q).engine("jax").mesh(8).plan(db)
+    diags = plan.verify(strict=False)
+    for d in diags:
+        failures += 1
+        print(f"catalog[TPCH@mesh=8]: {d}")
+    if not diags:
+        print("catalog[TPCH@mesh=8]: ok")
+    return 1 if failures else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument(
+        "--check",
+        nargs="*",
+        metavar="PATH",
+        default=None,
+        help="lint the given files/directories (default: src)",
+    )
+    ap.add_argument(
+        "--verify-catalog",
+        action="store_true",
+        help="compile + verify every catalog golden plan",
+    )
+    args = ap.parse_args(argv)
+
+    rc = 0
+    if args.verify_catalog:
+        rc |= _verify_catalog()
+    if args.check is not None or not args.verify_catalog:
+        paths = args.check if args.check else ["src"]
+        findings = lint_paths(paths)
+        for f in findings:
+            print(f)
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)
+            rc |= 1
+        else:
+            print(f"lint: clean ({len(paths)} path(s))")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,582 @@
+"""AST lint suite with repo-specific rules (DESIGN.md §11).
+
+Three rule families, each encoding a bug class this repo has actually
+shipped (or is structurally exposed to):
+
+* **jit-region purity** (``jit-branch`` / ``jit-item`` / ``jit-numpy``)
+  — inside a traced region, data-dependent Python branching silently
+  specializes on one trace (or raises a tracer-bool error), and
+  ``.item()`` / host ``np.`` calls force device sync or break tracing.
+  A *jit region* is a function decorated with ``jax.jit`` (directly or
+  via ``functools.partial``), passed to ``jax.jit`` / ``shard_map`` /
+  ``pl.pallas_call`` (possibly wrapped in ``functools.partial``), or
+  carrying an explicit ``# jit-region`` marker on its ``def`` line (the
+  closure-returned traced functions in ``core/jax_engine.py`` and
+  ``core/distributed.py``).  Keyword-only parameters and
+  ``static_argnames`` are static — branching on them is fine.
+* **even-tiling arithmetic** (``tile-floordiv``) — the PR 4 bug class:
+  a plain ``a // b`` grid/step computation inside a kernel scope drops
+  the trailing partial block unless the operand was padded to a
+  multiple first.  Flagged unless the enclosing function also contains
+  the ceil-div idiom ``-(-a // b)`` or a ``% b`` guard with the same
+  divisor (the ``pad = -n % b`` padding idiom).
+* **lock discipline** (``lock-guard``) — shared attributes annotated
+  ``# guarded-by: <lock>`` must only be touched inside a
+  ``with self.<lock>:`` block (``__init__`` exempt; a method whose
+  ``def`` line carries the same annotation asserts its callers hold the
+  lock).  Nested closures reset the held-lock set: a closure defined
+  under the lock typically *runs* after it is released.
+
+Suppress a finding with a same-line ``# lint-ok: <code>`` comment
+carrying a justification.  CLI: ``python -m repro.analysis --check ...``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+_JIT_MARK_RE = re.compile(r"#\s*jit-region\b")
+_OK_RE = re.compile(r"#\s*lint-ok:\s*([a-z-]+(?:\s*,\s*[a-z-]+)*)")
+
+# attribute reads that are static under tracing even on traced values
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
+_TRACE_ENTRY_CALLS = {"jit", "shard_map", "pallas_call"}
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+
+def _call_name(func: ast.expr) -> str | None:
+    """Trailing name of a call target: ``jax.jit`` -> ``jit``."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _is_partial(call: ast.expr) -> bool:
+    return isinstance(call, ast.Call) and _call_name(call.func) == "partial"
+
+
+def _suppressed(lines: list[str], lineno: int, code: str) -> bool:
+    if 1 <= lineno <= len(lines):
+        m = _OK_RE.search(lines[lineno - 1])
+        if m:
+            return code in [c.strip() for c in m.group(1).split(",")]
+    return False
+
+
+def _const_names(node: ast.expr) -> list[str]:
+    """String constants of a tuple/list/str literal (static_argnames)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return out
+    return []
+
+
+class _Region:
+    """One detected jit region: the function + its static param names."""
+
+    def __init__(self, fn: ast.FunctionDef, static: set[str]):
+        self.fn = fn
+        self.static = static
+
+
+def _collect_jit_regions(tree: ast.Module, lines: list[str]) -> list[_Region]:
+    regions: dict[ast.FunctionDef, set[str]] = {}
+    fns_by_name: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fns_by_name.setdefault(node.name, []).append(node)
+
+    def add(fn: ast.FunctionDef, extra_static: set[str] | None = None) -> None:
+        static = regions.setdefault(fn, set())
+        # keyword-only params are bound via functools.partial at trace
+        # time in this repo's kernel idiom — compile-time constants
+        static |= {a.arg for a in fn.args.kwonlyargs}
+        if extra_static:
+            static |= extra_static
+
+    for fn in (f for fs in fns_by_name.values() for f in fs):
+        # explicit marker on the def line
+        if 1 <= fn.lineno <= len(lines) and _JIT_MARK_RE.search(lines[fn.lineno - 1]):
+            add(fn)
+        for dec in fn.decorator_list:
+            name = _call_name(dec.func if isinstance(dec, ast.Call) else dec)
+            if name == "jit":
+                add(fn)
+            elif name == "partial" and isinstance(dec, ast.Call) and dec.args:
+                if _call_name(dec.args[0]) == "jit":
+                    static = set()
+                    for kw in dec.keywords:
+                        if kw.arg == "static_argnames":
+                            static |= set(_const_names(kw.value))
+                    add(fn, static)
+
+    # functions handed to jit(...) / shard_map(...) / pallas_call(...)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        if _call_name(node.func) not in _TRACE_ENTRY_CALLS:
+            continue
+        target, static = node.args[0], set()
+        if _is_partial(target) and target.args:
+            static = {kw.arg for kw in target.keywords if kw.arg}
+            target = target.args[0]
+        if isinstance(target, ast.Name):
+            for fn in fns_by_name.get(target.id, ()):
+                add(fn, static)
+    return [_Region(fn, static) for fn, static in regions.items()]
+
+
+# ----------------------------------------------------------------------
+# rule: jit-region purity
+# ----------------------------------------------------------------------
+
+
+class _TaintChecker:
+    """Flow-lite taint tracking inside one jit region: traced params
+    (and values derived from them) must not drive Python control flow."""
+
+    def __init__(self, region: _Region, path: str, lines: list[str]):
+        self.region = region
+        self.path = path
+        self.lines = lines
+        self.findings: list[LintFinding] = []
+        fn = region.fn
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        if fn.args.vararg:
+            params.append(fn.args.vararg.arg)
+        self.taint: set[str] = {
+            p for p in params if p not in region.static and p != "self"
+        }
+
+    # -- expression taint ------------------------------------------------
+    def tainted(self, node: ast.expr | None) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.taint
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value) or self.tainted(node.slice)
+        if isinstance(node, ast.Call):
+            if _call_name(node.func) == "len":
+                return False
+            if isinstance(node.func, ast.Attribute) and self.tainted(node.func):
+                return True  # method call on a traced receiver
+            return any(self.tainted(a) for a in node.args) or any(
+                self.tainted(k.value) for k in node.keywords
+            )
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.tainted(node.left) or any(
+                self.tainted(c) for c in node.comparators
+            )
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        return False
+
+    def _bind(self, target: ast.expr, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.taint.add(target.id)
+            else:
+                self.taint.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    def _emit(self, node: ast.AST, code: str, message: str) -> None:
+        if _suppressed(self.lines, node.lineno, code):
+            return
+        self.findings.append(
+            LintFinding(self.path, node.lineno, node.col_offset, code, message)
+        )
+
+    # -- statement walk --------------------------------------------------
+    def run(self) -> list[LintFinding]:
+        # two passes: taint introduced late in a loop body reaches
+        # earlier branch tests on the second pass
+        for final in (False, True):
+            self._walk(self.region.fn.body, report=final)
+        return self.findings
+
+    def _walk(self, body: list[ast.stmt], report: bool) -> None:
+        for stmt in body:
+            self._stmt(stmt, report)
+
+    def _stmt(self, stmt: ast.stmt, report: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: its params are traced values too (loop bodies
+            # handed to fori_loop/when); closure vars keep outer taint
+            for a in stmt.args.posonlyargs + stmt.args.args:
+                self.taint.add(a.arg)
+            self._walk(stmt.body, report)
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self.tainted(stmt.value)
+            for target in stmt.targets:
+                self._bind(target, t)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, self.tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name) and self.tainted(stmt.value):
+                self.taint.add(stmt.target.id)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if report and self.tainted(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                self._emit(
+                    stmt,
+                    "jit-branch",
+                    f"data-dependent `{kind}` on a traced value inside a "
+                    "jit region — use jnp.where/lax.cond, or mark the "
+                    "argument static",
+                )
+        elif isinstance(stmt, ast.Assert):
+            if report and self.tainted(stmt.test):
+                self._emit(
+                    stmt,
+                    "jit-branch",
+                    "assert on a traced value inside a jit region",
+                )
+        if report:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.IfExp) and self.tainted(node.test):
+                    self._emit(
+                        node,
+                        "jit-branch",
+                        "data-dependent conditional expression on a "
+                        "traced value inside a jit region",
+                    )
+                elif (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                ):
+                    self._emit(
+                        node,
+                        "jit-item",
+                        ".item() inside a jit region forces a host sync "
+                        "/ breaks tracing",
+                    )
+                elif (
+                    isinstance(node, ast.Name)
+                    and node.id == "np"
+                    and isinstance(node.ctx, ast.Load)
+                ):
+                    self._emit(
+                        node,
+                        "jit-numpy",
+                        "host numpy (`np.`) inside a jit region — use "
+                        "jnp/ jax.lax",
+                    )
+        # recurse into compound statements (loop/branch bodies)
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if isinstance(sub, list) and not isinstance(
+                stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                self._walk(sub, report)
+        if isinstance(stmt, ast.Try):
+            for h in stmt.handlers:
+                self._walk(h.body, report)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            pass  # body already covered by the generic recursion above
+
+
+# ----------------------------------------------------------------------
+# rule: even-tiling arithmetic
+# ----------------------------------------------------------------------
+
+
+def _ceil_div_nodes(fn: ast.FunctionDef) -> set[ast.BinOp]:
+    """FloorDiv nodes that are part of the ``-(-a // b)`` ceil idiom."""
+    out: set[ast.BinOp] = set()
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.UnaryOp)
+            and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.BinOp)
+            and isinstance(node.operand.op, ast.FloorDiv)
+            and isinstance(node.operand.left, ast.UnaryOp)
+            and isinstance(node.operand.left.op, ast.USub)
+        ):
+            out.add(node.operand)
+    return out
+
+
+def _check_tiling(
+    fn: ast.FunctionDef, path: str, lines: list[str]
+) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+    ceil = _ceil_div_nodes(fn)
+    mod_divisors = {
+        ast.dump(n.right)
+        for n in ast.walk(fn)
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+    }
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv)):
+            continue
+        if node in ceil:
+            continue
+        if ast.dump(node.right) in mod_divisors:
+            # the `pad = -n % b` (or divisibility-check) idiom guards
+            # this divisor somewhere in the same function
+            continue
+        if _suppressed(lines, node.lineno, "tile-floordiv"):
+            continue
+        findings.append(
+            LintFinding(
+                path,
+                node.lineno,
+                node.col_offset,
+                "tile-floordiv",
+                "floor division without a padding/ceil-div guard for "
+                "this divisor assumes even tiling and drops the "
+                "trailing partial block — pad first (`-n % b`) or use "
+                "`-(-n // b)`",
+            )
+        )
+    return findings
+
+
+def _has_pallas_call(fn: ast.FunctionDef) -> bool:
+    return any(
+        isinstance(n, ast.Call) and _call_name(n.func) == "pallas_call"
+        for n in ast.walk(fn)
+    )
+
+
+# ----------------------------------------------------------------------
+# rule: lock discipline (# guarded-by)
+# ----------------------------------------------------------------------
+
+
+def _guard_comment(lines: list[str], lineno: int) -> str | None:
+    if 1 <= lineno <= len(lines):
+        m = _GUARDED_RE.search(lines[lineno - 1])
+        if m:
+            return m.group(1)
+    return None
+
+
+class _LockChecker:
+    """Per-class ``# guarded-by: <lock>`` discipline."""
+
+    def __init__(self, cls: ast.ClassDef, path: str, lines: list[str]):
+        self.cls = cls
+        self.path = path
+        self.lines = lines
+        self.guards: dict[str, str] = {}  # attr -> lock attr
+        self.findings: list[LintFinding] = []
+
+    def collect(self) -> None:
+        for node in ast.walk(self.cls):
+            attr = None
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (
+                        isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                    ):
+                        attr = t.attr
+            elif isinstance(node, ast.AnnAssign):
+                t = node.target
+                if isinstance(t, ast.Name):  # dataclass field
+                    attr = t.id
+                elif (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                ):
+                    attr = t.attr
+            if attr is None:
+                continue
+            lock = _guard_comment(self.lines, node.lineno)
+            if lock is not None:
+                self.guards[attr] = lock
+
+    def run(self) -> list[LintFinding]:
+        self.collect()
+        if not self.guards:
+            return []
+        for node in self.cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name == "__init__":
+                    continue
+                held: set[str] = set()
+                lock = _guard_comment(self.lines, node.lineno)
+                if lock is not None:
+                    held.add(lock)  # caller-holds-lock helper
+                self._walk(node.body, held)
+        return self.findings
+
+    def _with_locks(self, stmt: ast.With) -> set[str]:
+        out = set()
+        for item in stmt.items:
+            e = item.context_expr
+            if (
+                isinstance(e, ast.Attribute)
+                and isinstance(e.value, ast.Name)
+                and e.value.id == "self"
+            ):
+                out.add(e.attr)
+        return out
+
+    def _check_expr(self, node: ast.AST, held: set[str]) -> None:
+        for sub in ast.walk(node):
+            if (
+                isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"
+                and sub.attr in self.guards
+            ):
+                lock = self.guards[sub.attr]
+                if lock not in held and not _suppressed(
+                    self.lines, sub.lineno, "lock-guard"
+                ):
+                    self.findings.append(
+                        LintFinding(
+                            self.path,
+                            sub.lineno,
+                            sub.col_offset,
+                            "lock-guard",
+                            f"self.{sub.attr} is guarded-by {lock!r} but "
+                            f"accessed without holding `with self.{lock}:`",
+                        )
+                    )
+
+    def _walk(self, body: list[ast.stmt], held: set[str]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a closure defined here typically RUNS after the lock
+                # is released — it holds nothing
+                inner = set()
+                lock = _guard_comment(self.lines, stmt.lineno)
+                if lock is not None:
+                    inner.add(lock)
+                self._walk(stmt.body, inner)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                got = self._with_locks(stmt)
+                for item in stmt.items:
+                    self._check_expr(item.context_expr, held)
+                self._walk(stmt.body, held | got)
+                continue
+            # check every expression in this statement, then recurse
+            for field in ast.iter_fields(stmt):
+                _name, value = field
+                vals = value if isinstance(value, list) else [value]
+                for v in vals:
+                    if isinstance(v, ast.expr):
+                        self._check_expr(v, held)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if isinstance(sub, list):
+                    self._walk(sub, held)
+            if isinstance(stmt, ast.Try):
+                for h in stmt.handlers:
+                    self._walk(h.body, held)
+
+
+# ----------------------------------------------------------------------
+# drivers
+# ----------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
+    tree = ast.parse(src, filename=path)
+    lines = src.splitlines()
+    findings: list[LintFinding] = []
+
+    regions = _collect_jit_regions(tree, lines)
+    region_fns = {r.fn for r in regions}
+    for region in regions:
+        findings += _TaintChecker(region, path, lines).run()
+        findings += _check_tiling(region.fn, path, lines)
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.FunctionDef)
+            and node not in region_fns
+            and _has_pallas_call(node)
+        ):
+            findings += _check_tiling(node, path, lines)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            findings += _LockChecker(node, path, lines).run()
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.code))
+
+
+def lint_file(path: str | Path) -> list[LintFinding]:
+    p = Path(path)
+    try:
+        src = p.read_text()
+    except (OSError, UnicodeDecodeError) as e:  # pragma: no cover
+        return [LintFinding(str(p), 1, 0, "io-error", str(e))]
+    try:
+        return lint_source(src, str(p))
+    except SyntaxError as e:
+        return [LintFinding(str(p), e.lineno or 1, 0, "syntax-error", e.msg or "")]
+
+
+def iter_python_files(paths: list[str | Path]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            out.extend(
+                f
+                for f in sorted(p.rglob("*.py"))
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)
+            )
+    return out
+
+
+def lint_paths(paths: list[str | Path]) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+    for f in iter_python_files(paths):
+        findings += lint_file(f)
+    return findings

@@ -190,6 +190,29 @@ class Plan:
         return (attr, tile)
 
     # ------------------------------------------------------------------
+    def verify(self, strict: bool = True) -> list:
+        """Check every declared structural invariant of this compiled
+        plan (DESIGN.md §11): decomposition-tree running intersection,
+        semiring-channel wiring (AVG's SUM/COUNT pairing included),
+        exact disjoint split/shard key-range partitions, pad-sentinel
+        non-aliasing preconditions, and accumulator-overflow headroom at
+        sketch-estimated cardinalities.
+
+        Returns the (empty, when sound) list of
+        :class:`~repro.analysis.verify.Diagnostic` findings;
+        ``strict=True`` (default) raises
+        :class:`~repro.analysis.verify.PlanInvariantError` on any.
+        Runs automatically inside :func:`compile_plan` when
+        ``REPRO_VERIFY=1`` is set."""
+        self._require_physical()
+        from repro.analysis.verify import PlanInvariantError, verify_plan
+
+        diags = verify_plan(self)
+        if strict and diags:
+            raise PlanInvariantError(diags)
+        return diags
+
+    # ------------------------------------------------------------------
     def execute(self, mesh: "object | None" = None) -> AggResult:
         """Run every named aggregate in a single contraction pass.
 
@@ -600,7 +623,7 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
                     # split cannot fit either; fall back to streaming
                     split = None
 
-    return Plan(
+    plan = Plan(
         spec=spec,
         db=edb,
         query=query0,
@@ -621,6 +644,18 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         split=split,
         stats_enabled=stats_on,
     )
+    if physical and _verify_on_compile():
+        plan.verify()  # debug-mode assert (DESIGN.md §11)
+    return plan
+
+
+def _verify_on_compile() -> bool:
+    """``REPRO_VERIFY=1`` runs the plan-invariant verifier on every
+    physical compile — the debug-mode assert; off by default so the
+    hot serve path does not pay the stats-collection walk."""
+    import os
+
+    return os.environ.get("REPRO_VERIFY", "") not in ("", "0")
 
 
 def _apply_aliases(spec, db: Database, notes: list[str]) -> Database:

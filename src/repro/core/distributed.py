@@ -270,7 +270,7 @@ class DistributedSparseProgram:
             np.inf if kind == "min" else -np.inf for kind, _ in self.minmax
         )
 
-        def fn(inputs):
+        def fn(inputs):  # jit-region
             msgs: dict[str, jax.Array] = {}
             mm_msgs: list[dict[str, jax.Array]] = [{} for _ in range(n_mm)]
             for hop in hops:

@@ -142,7 +142,7 @@ def _dense_plan(prep: Prepared) -> tuple[tuple, str]:
 
 
 def _fn_from_plan(plan: tuple, root: str) -> Callable:
-    def fn(tensors: dict[str, jax.Array]) -> jax.Array:
+    def fn(tensors: dict[str, jax.Array]) -> jax.Array:  # jit-region
         results: dict[str, jax.Array] = {}
         for rel, expr, children in plan:
             results[rel] = jnp.einsum(

@@ -66,6 +66,11 @@ class GHDPlan:
     # re-points each aggregate channel through this, then through the
     # derived Prepared.measure_moves)
     measure_bags: dict[str, str] = None  # type: ignore[assignment]
+    # the input hypergraph the GHD was built from, retained so the plan
+    # verifier can re-prove edge cover + running intersection
+    # (repro.analysis.verify.verify_ghd_plan) without re-resolving the
+    # original schema
+    edges: dict[str, frozenset[str]] = None  # type: ignore[assignment]
 
     def invalidated_bags(self, rel: str) -> list[str]:
         """Bags whose materialization a delta on input relation ``rel``
@@ -287,6 +292,7 @@ def compile_ghd(
         derived_dicts=dicts_d,
         bag_out_attrs=bag_out_attrs,
         measure_bags=measure_bag,
+        edges=edges,
     )
 
 

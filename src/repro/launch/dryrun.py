@@ -127,6 +127,11 @@ def build_cell(arch: str, shape_name: str, mesh):
                     l, g = jax.value_and_grad(model.loss)(params, mb)
                     return (tl + l, jax.tree.map(jnp.add, tg, g)), None
 
+                lead = jax.tree.leaves(batch)[0].shape[0]
+                if lead % accum:
+                    raise ValueError(
+                        f"batch dim {lead} not divisible by accum={accum}"
+                    )
                 mbs = jax.tree.map(
                     lambda x: x.reshape(
                         (accum, x.shape[0] // accum) + x.shape[1:]

@@ -39,6 +39,11 @@ def build_train_step(model, acfg: AdamWConfig, accum: int = 1):
                 l, g = jax.value_and_grad(micro)(params, mb)
                 return (tot_l + l, jax.tree.map(jnp.add, tot_g, g)), None
 
+            lead = jax.tree.leaves(batch)[0].shape[0]
+            if lead % accum:
+                raise ValueError(
+                    f"batch dim {lead} not divisible by accum={accum}"
+                )
             zero_g = jax.tree.map(jnp.zeros_like, params)
             mbs = jax.tree.map(
                 lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),

@@ -101,6 +101,15 @@ def _subtree_join_rows(prep: Prepared, stats: Statistics) -> dict[str, float]:
     return out
 
 
+def subtree_join_rows(prep: Prepared, stats: Statistics) -> dict[str, float]:
+    """Fanout-chained subtree join-row estimates, public for the plan
+    verifier's accumulator-overflow check: a node's count cells cannot
+    (in estimate) exceed its subtree's join-row total, so comparing the
+    maximum against the engine dtype's exact-integer limit bounds the
+    silent-rounding risk (``repro.analysis.verify.check_overflow``)."""
+    return _subtree_join_rows(prep, stats)
+
+
 def node_card_estimates(
     prep: Prepared, stats: Statistics
 ) -> dict[str, float]:

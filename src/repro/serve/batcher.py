@@ -37,22 +37,33 @@ from repro.relational.relation import Relation
 
 @dataclass
 class BatchStats:
-    """Fusion counters."""
+    """Fusion counters, incremented from concurrent server workers —
+    mutate only through :meth:`add`."""
 
-    batches: int = 0  # fused executions (>= 2 queries in one pass)
-    fused_queries: int = 0  # queries served by a fused pass
-    shared_identical: int = 0  # ... of which were identical-shape shares
-    merged_channels: int = 0  # ... of which went through a channel merge
-    solo: int = 0  # queries executed unfused
+    batches: int = 0  # fused executions, >= 2 queries  # guarded-by: _lock
+    fused_queries: int = 0  # queries served by a fused pass  # guarded-by: _lock
+    shared_identical: int = 0  # identical-shape shares  # guarded-by: _lock
+    merged_channels: int = 0  # via a channel merge  # guarded-by: _lock
+    solo: int = 0  # queries executed unfused  # guarded-by: _lock
+    _lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def add(self, **deltas: int) -> None:
+        """Atomically bump the named counters (worker threads race here)."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
 
     def snapshot(self) -> dict[str, int]:
-        return {
-            "batches": self.batches,
-            "fused_queries": self.fused_queries,
-            "shared_identical": self.shared_identical,
-            "merged_channels": self.merged_channels,
-            "solo": self.solo,
-        }
+        with self._lock:
+            return {
+                "batches": self.batches,
+                "fused_queries": self.fused_queries,
+                "shared_identical": self.shared_identical,
+                "merged_channels": self.merged_channels,
+                "solo": self.solo,
+            }
 
 
 @dataclass
@@ -97,10 +108,10 @@ class FusionBatcher:
     ):
         self.window = max(0.0, float(window))
         self._dispatch = dispatch
-        self._groups: dict[tuple, _Group] = {}
+        self._groups: dict[tuple, _Group] = {}  # guarded-by: _wake
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
-        self._closed = False
+        self._closed = False  # guarded-by: _wake
         self.stats = BatchStats()
         self._thread = threading.Thread(
             target=self._loop, name="joinagg-fusion-batcher", daemon=True
@@ -181,14 +192,16 @@ def run_group(items: list[_Pending], lookup_plan, stats: BatchStats) -> None:
         return
     try:
         if len(live) == 1:
-            stats.solo += 1
+            stats.add(solo=1)
             _resolve_solo(live[0], lookup_plan)
             return
         if all(it.shape_key == live[0].shape_key for it in live):
             result = lookup_plan(live[0].spec).execute()
-            stats.batches += 1
-            stats.fused_queries += len(live)
-            stats.shared_identical += len(live)
+            stats.add(
+                batches=1,
+                fused_queries=len(live),
+                shared_identical=len(live),
+            )
             for it in live:
                 it.future.set_result(result)
             return
@@ -217,7 +230,7 @@ def _run_merged(items: list[_Pending], lookup_plan, stats: BatchStats) -> None:
     except Exception:
         # planner rejected the union (e.g. two bundles measure different
         # columns of one relation) — run each query on its own
-        stats.solo += len(items)
+        stats.add(solo=len(items))
         for it in items:
             try:
                 _resolve_solo(it, lookup_plan)
@@ -225,9 +238,9 @@ def _run_merged(items: list[_Pending], lookup_plan, stats: BatchStats) -> None:
                 if not it.future.done():
                     it.future.set_exception(e)
         return
-    stats.batches += 1
-    stats.fused_queries += len(items)
-    stats.merged_channels += len(items)
+    stats.add(
+        batches=1, fused_queries=len(items), merged_channels=len(items)
+    )
     for i, it in enumerate(items):
         names = [n for n, _ in effective_aggs(it.spec)]
         kinds = {n: a.kind for n, a in effective_aggs(it.spec)}

@@ -59,10 +59,10 @@ class LRUCache:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self.name = name
-        self.stats = CacheStats()
-        self._data: OrderedDict[Any, Any] = OrderedDict()
+        self.stats = CacheStats()  # guarded-by: _lock
+        self._data: OrderedDict[Any, Any] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.RLock()
-        self._building: dict[Any, threading.Event] = {}
+        self._building: dict[Any, threading.Event] = {}  # guarded-by: _lock
 
     # -- dict-ish surface (used by the engine memos) -------------------
     def __len__(self) -> int:
@@ -239,7 +239,10 @@ class PlanCache:
 
     def __init__(self, maxsize: int = 64):
         self._lru = LRUCache(maxsize, name="plans")
-        self.stats = PlanCacheStats(lru=self._lru.stats)
+        # counters see concurrent lookup() callers, and build() runs
+        # OUTSIDE the LRU's per-key latch lock — they need their own lock
+        self._stats_lock = threading.Lock()
+        self.stats = PlanCacheStats(lru=self._lru.stats)  # guarded-by: _stats_lock
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -249,12 +252,14 @@ class PlanCache:
 
         key = plan_shape_key(spec, generation, stats_generation)
         if key is None:
-            self.stats.bypasses += 1
-            self.stats.compiles += 1
+            with self._stats_lock:
+                self.stats.bypasses += 1
+                self.stats.compiles += 1
             return compile_plan(spec, db)
 
         def build():
-            self.stats.compiles += 1
+            with self._stats_lock:
+                self.stats.compiles += 1
             return compile_plan(spec, db)
 
         return self._lru.get_or_create(key, build)

@@ -67,9 +67,12 @@ class ServedView:
     def __init__(self, name: str, handle):
         self.name = name
         self.handle = handle
+        # published by one reference store, read without a lock — readers
+        # see either the old or the new fully-built snapshot, never torn
         self._snap = ViewSnapshot(0, self._copy_result())
         self._queue: queue.Queue[_Delta | None] = queue.Queue()
-        self._closed = False
+        self._lock = threading.Lock()
+        self._closed = False  # guarded-by: _lock
         self._writer = threading.Thread(
             target=self._writer_loop, name=f"joinagg-view-{name}", daemon=True
         )
@@ -97,25 +100,32 @@ class ServedView:
         return self._enqueue(op, rel, tuples)
 
     def _enqueue(self, op: str, rel: str, tuples) -> Future:
-        if self._closed:
-            raise RuntimeError(f"view {self.name!r} is closed")
         cols = _delta_columns(tuples)
         fut: Future = Future()
-        self._queue.put(_Delta(op, rel, cols, fut))
+        # check-and-enqueue under the lock, so no delta can slip in
+        # behind close()'s shutdown sentinel and hang its future
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"view {self.name!r} is closed")
+            self._queue.put(_Delta(op, rel, cols, fut))
         return fut
 
     def drain(self) -> int:
         """Block until every currently-enqueued delta is applied; returns
         the epoch after the drain."""
         fut: Future = Future()
-        self._queue.put(_Delta("drain", "", {}, fut))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"view {self.name!r} is closed")
+            self._queue.put(_Delta("drain", "", {}, fut))
         return fut.result()
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
-        self._queue.put(None)
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(None)
         self._writer.join(timeout=10)
 
     # -- writer thread ---------------------------------------------------

@@ -1,0 +1,293 @@
+"""Unit tests for the AST lint suite (``repro.analysis.lint``): each
+rule fires on a minimal reproduction of its bug class and stays quiet on
+the sanctioned idiom right next to it."""
+import textwrap
+
+from repro.analysis.lint import lint_paths, lint_source
+
+
+def codes(src: str) -> list[str]:
+    return [f.code for f in lint_source(textwrap.dedent(src), "t.py")]
+
+
+# ----------------------------------------------------------------------
+# jit-region detection + purity
+# ----------------------------------------------------------------------
+
+
+def test_jit_branch_on_traced_argument():
+    assert "jit-branch" in codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """
+    )
+
+
+def test_static_argnames_are_not_traced():
+    assert codes(
+        """
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode == "fast":
+                return x
+            return x * 2
+        """
+    ) == []
+
+
+def test_kwonly_params_are_static():
+    # the repo's kernel idiom: kwonly params bound via functools.partial
+    # before tracing are compile-time constants
+    assert codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, *, kind):
+            if kind == "min":
+                return x
+            return -x
+        """
+    ) == []
+
+
+def test_marker_comment_makes_a_region():
+    src = """
+    def outer():
+        def fn(tensors):  # jit-region
+            v = tensors["a"]
+            if v > 0:
+                return v
+            return -v
+        return fn
+    """
+    assert "jit-branch" in codes(src)
+
+
+def test_function_passed_to_pallas_call_is_a_region():
+    assert "jit-branch" in codes(
+        """
+        import functools
+        import jax.experimental.pallas as pl
+
+        def kernel(x_ref, o_ref, *, block):
+            v = x_ref[...]
+            if v.sum() > 0:
+                o_ref[...] = v
+
+        def run(x):
+            return pl.pallas_call(
+                functools.partial(kernel, block=8), grid=(1,)
+            )(x)
+        """
+    )
+
+
+def test_shape_access_breaks_taint():
+    assert codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.shape[0] > 4:
+                return x[:4]
+            return x
+        """
+    ) == []
+
+
+def test_item_and_host_numpy_flagged():
+    got = codes(
+        """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            y = np.asarray(x)
+            return x.sum().item() + y.sum()
+        """
+    )
+    assert "jit-item" in got and "jit-numpy" in got
+
+
+def test_taint_propagates_through_assignment():
+    assert "jit-branch" in codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = x * 2
+            z = y + 1
+            while z > 0:
+                z = z - 1
+            return z
+        """
+    )
+
+
+# ----------------------------------------------------------------------
+# even-tiling arithmetic
+# ----------------------------------------------------------------------
+
+
+def test_tile_floordiv_fires_without_guard():
+    assert "tile-floordiv" in codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, *, block):
+            steps = x.shape[0] // block
+            return steps
+        """
+    )
+
+
+def test_ceil_div_idiom_is_exempt():
+    assert codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, *, block):
+            steps = -(-x.shape[0] // block)
+            return steps
+        """
+    ) == []
+
+
+def test_same_divisor_mod_guard_is_exempt():
+    # the `pad = -n % b` padding idiom licenses `// b` in the function
+    assert codes(
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, *, block):
+            pad = -x.shape[0] % block
+            x = jnp.pad(x, (0, pad))
+            return x.shape[0] // block
+        """
+    ) == []
+
+
+def test_lint_ok_suppression():
+    assert codes(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, *, block):
+            return x.shape[0] // block  # lint-ok: tile-floordiv
+        """
+    ) == []
+
+
+# ----------------------------------------------------------------------
+# lock discipline
+# ----------------------------------------------------------------------
+
+
+def test_lock_guard_fires_on_unlocked_access():
+    assert "lock-guard" in codes(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+
+            def bump(self):
+                self.n += 1
+        """
+    )
+
+
+def test_lock_guard_quiet_under_with():
+    assert codes(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+
+            def bump(self):
+                with self._lock:
+                    self.n += 1
+        """
+    ) == []
+
+
+def test_closure_does_not_inherit_the_lock():
+    # a closure defined under the lock typically runs after release
+    assert "lock-guard" in codes(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+
+            def deferred(self):
+                with self._lock:
+                    def cb():
+                        self.n += 1
+                    return cb
+        """
+    )
+
+
+def test_def_line_annotation_means_caller_holds():
+    assert codes(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+
+            def _bump_locked(self):  # guarded-by: _lock
+                self.n += 1
+        """
+    ) == []
+
+
+def test_init_is_exempt():
+    assert codes(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: _lock
+                self.n = 1
+        """
+    ) == []
+
+
+# ----------------------------------------------------------------------
+# the repo itself must lint clean (mirrors the CI gate)
+# ----------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    findings = lint_paths(["src"])
+    assert findings == [], [str(f) for f in findings]

@@ -1,0 +1,415 @@
+"""Mutation suite for the plan-invariant verifier (DESIGN.md §11).
+
+One test per diagnostic code: each takes a *real* compiled plan, breaks
+exactly the structure the invariant protects, and asserts the verifier
+reports that code — proving the catalog in ``repro.analysis.verify``'s
+docstring is live, not aspirational.  A final test asserts the unbroken
+fixtures verify clean (so the mutations, not the fixtures, fire the
+diagnostics).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.verify import (
+    PlanInvariantError,
+    check_overflow,
+    verify_distributed_program,
+    verify_sparse_program,
+)
+from repro.api.builder import Q
+from repro.api.engines import Channel, MinMaxRequest
+from repro.core.prepare import CSRView
+from repro.relational.relation import Database
+
+
+def chain_db() -> Database:
+    rng = np.random.default_rng(7)
+    n = 60
+    return Database.from_mapping(
+        {
+            "R1": {"g1": rng.integers(0, 4, n), "p0": rng.integers(0, 3, n)},
+            "R2": {
+                "p0": rng.integers(0, 3, n),
+                "p1": rng.integers(0, 3, n),
+                "m": rng.integers(1, 9, n),
+            },
+            "R3": {"p1": rng.integers(0, 3, n), "g2": rng.integers(0, 4, n)},
+        }
+    )
+
+
+def chain_plan():
+    """Fresh acyclic Sum+Avg jax plan — mutation targets mutate it freely."""
+    from repro.aggregates.semiring import Avg, Count, Sum
+
+    return (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(n=Count(), total=Sum("R2.m"), mean=Avg("R2.m"))
+        .engine("jax")
+        .plan(chain_db())
+    )
+
+
+def skew_plan():
+    """Fresh SKEWCHAIN plan at golden scale — carries a SplitDecision."""
+    from repro.data.queries import skewed_chain_like
+
+    db, q = skewed_chain_like(600, seed=0)
+    plan = Q.from_query(q).engine("jax").plan(db)
+    assert plan.split is not None, "fixture lost its split decision"
+    return plan
+
+
+def tri_plan():
+    """Fresh cyclic triangle plan — carries a GHDPlan."""
+    from repro.data.queries import triangle_like
+
+    db, q = triangle_like(120, seed=0)
+    plan = Q.from_query(q).engine("jax").plan(db)
+    assert plan.ghd_plan is not None, "fixture lost its GHD plan"
+    return plan
+
+
+def codes_of(plan):
+    return {d.code for d in plan.verify(strict=False)}
+
+
+# ----------------------------------------------------------------------
+# tree + encodings
+# ----------------------------------------------------------------------
+
+
+def test_tree_root_fires_on_dangling_root():
+    plan = chain_plan()
+    plan.prep.decomposition.root = "NOPE"
+    assert "V-TREE-ROOT" in codes_of(plan)
+
+
+def test_tree_order_fires_on_reversed_order():
+    plan = chain_plan()
+    plan.prep.decomposition.order.reverse()
+    assert "V-TREE-ORDER" in codes_of(plan)
+
+
+def test_tree_order_fires_on_broken_child_pointer():
+    plan = chain_plan()
+    deco = plan.prep.decomposition
+    child = next(r for r in deco.order if deco.nodes[r].parent is not None)
+    deco.nodes[child].parent = child  # no longer points at its parent
+    assert "V-TREE-ORDER" in codes_of(plan)
+
+
+def test_tree_leaf_fires_on_groupless_leaf():
+    plan = chain_plan()
+    deco = plan.prep.decomposition
+    leaf = next(
+        r
+        for r in deco.order
+        if not deco.nodes[r].children and r != deco.root
+    )
+    del plan.prep.schema.group_of[leaf]
+    assert "V-TREE-LEAF" in codes_of(plan)
+
+
+def test_rip_fires_on_disconnected_attribute():
+    plan = chain_plan()
+    rel = plan.prep.schema.relevant
+    # plant a phantom attr on the two chain ends; the middle relation
+    # does not hold it, so its holders are a disconnected pair
+    rel["R1"] = tuple(rel["R1"]) + ("zz",)
+    rel["R3"] = tuple(rel["R3"]) + ("zz",)
+    diags = plan.verify(strict=False)
+    assert any(d.code == "V-RIP" and "zz" in d.message for d in diags)
+
+
+def test_codes_fires_on_out_of_domain_code():
+    plan = chain_plan()
+    plan.prep.encoded["R2"].codes[0, 0] = -5
+    diags = plan.verify(strict=False)
+    assert any(d.code == "V-CODES" and d.site == "codes/R2" for d in diags)
+
+
+def test_codes_fires_on_negative_multiplicity():
+    plan = chain_plan()
+    plan.prep.encoded["R1"].count[0] = -1
+    assert "V-CODES" in codes_of(plan)
+
+
+# ----------------------------------------------------------------------
+# semiring channels
+# ----------------------------------------------------------------------
+
+
+def test_chan_count_fires_when_count_slot_dropped():
+    plan = chain_plan()
+    bad = dataclasses.replace(plan, channels=plan.channels[1:])
+    assert "V-CHAN-COUNT" in codes_of(bad)
+
+
+def test_chan_dup_fires_on_duplicated_channel():
+    plan = chain_plan()
+    bad = dataclasses.replace(
+        plan, channels=plan.channels + (plan.channels[-1],)
+    )
+    assert "V-CHAN-DUP" in codes_of(bad)
+
+
+def test_chan_measure_fires_on_payloadless_relation():
+    plan = chain_plan()
+    # R1 carries no 'sum' payload (the measure lives on R2)
+    bad = dataclasses.replace(
+        plan, channels=(plan.channels[0], Channel("sum", ("R1", "m")))
+    )
+    diags = bad.verify(strict=False)
+    assert any(
+        d.code == "V-CHAN-MEASURE" and d.site == "channels/R1" for d in diags
+    )
+
+
+def test_chan_recipe_fires_when_avg_loses_its_sum_half():
+    plan = chain_plan()
+    sum_ch = plan.assemble["mean"][1]  # the SUM channel AVG divides
+    bad = dataclasses.replace(
+        plan, channels=tuple(c for c in plan.channels if c != sum_ch)
+    )
+    diags = bad.verify(strict=False)
+    assert any(
+        d.code == "V-CHAN-RECIPE" and "mean" in d.site for d in diags
+    )
+
+
+def test_chan_recipe_fires_on_missing_recipe():
+    plan = chain_plan()
+    assemble = dict(plan.assemble)
+    del assemble["total"]
+    bad = dataclasses.replace(plan, assemble=assemble)
+    diags = bad.verify(strict=False)
+    assert any(
+        d.code == "V-CHAN-RECIPE" and "no assembly recipe" in d.message
+        for d in diags
+    )
+
+
+# ----------------------------------------------------------------------
+# per-split plans
+# ----------------------------------------------------------------------
+
+
+def test_split_partition_fires_on_range_gap():
+    plan = skew_plan()
+    (lo0, hi0), *rest = plan.split.ranges
+    bad_split = dataclasses.replace(
+        plan.split, ranges=((lo0 + 1, hi0),) + tuple(rest)
+    )
+    bad = dataclasses.replace(plan, split=bad_split)
+    diags = bad.verify(strict=False)
+    assert any(
+        d.code == "V-SPLIT-PARTITION" and "double-count" in d.message
+        for d in diags
+    )
+
+
+def test_split_root_fires_on_root_count_mismatch():
+    plan = skew_plan()
+    bad_split = dataclasses.replace(plan.split, roots=plan.split.roots[:-1])
+    bad = dataclasses.replace(plan, split=bad_split)
+    assert "V-SPLIT-ROOT" in codes_of(bad)
+
+
+def test_split_attr_fires_on_group_attribute():
+    plan = skew_plan()
+    gattr = plan.prep.group_attrs[0][1]
+    bad_split = dataclasses.replace(plan.split, attr=gattr)
+    bad = dataclasses.replace(plan, split=bad_split)
+    assert "V-SPLIT-ATTR" in codes_of(bad)
+
+
+def test_split_minmax_fires_on_injected_request():
+    plan = skew_plan()
+    bad = dataclasses.replace(
+        plan, minmax=(MinMaxRequest("min", ("R2", "m")),)
+    )
+    assert "V-SPLIT-MINMAX" in codes_of(bad)
+
+
+def test_split_heavy_fires_on_out_of_domain_key():
+    plan = skew_plan()
+    dom = plan.prep.dicts[plan.split.attr].size
+    bad_split = dataclasses.replace(plan.split, heavy=((dom + 5, 0.5),))
+    bad = dataclasses.replace(plan, split=bad_split)
+    assert "V-SPLIT-HEAVY" in codes_of(bad)
+
+
+# ----------------------------------------------------------------------
+# distributed shard partitions + sentinels
+# ----------------------------------------------------------------------
+
+
+def _poison_csr_cache(plan, **overrides):
+    prep = plan.prep
+    root = prep.decomposition.root
+    attr = prep.schema.group_of[root]
+    view = prep.csr_view(root, (attr,))
+    prep._csr_cache[(root, (attr,))] = dataclasses.replace(view, **overrides)
+
+
+def test_shard_partition_fires_on_unsorted_csr_keys():
+    plan = chain_plan()
+    root = plan.prep.decomposition.root
+    keys = plan.prep.csr_view(
+        root, (plan.prep.schema.group_of[root],)
+    ).keys
+    _poison_csr_cache(plan, keys=keys[::-1].copy())
+    bad = dataclasses.replace(plan, mesh=2)
+    diags = bad.verify(strict=False)
+    assert any(
+        d.code == "V-SHARD-PARTITION" and "unsorted" in d.message
+        for d in diags
+    )
+
+
+def test_shard_partition_fires_on_key_space_mismatch():
+    plan = chain_plan()
+    root = plan.prep.decomposition.root
+    dom = plan.prep.dicts[plan.prep.schema.group_of[root]].size
+    _poison_csr_cache(plan, num_keys=dom + 3)
+    bad = dataclasses.replace(plan, mesh=2)
+    assert "V-SHARD-PARTITION" in codes_of(bad)
+
+
+class _WideShardView(CSRView):
+    """A view whose first shard spans the whole key space — a valid
+    partition whose width exceeds the padded tile."""
+
+    def shard(self, num_shards):
+        ne = len(self.keys)
+        out = [(0, self.num_keys, slice(0, ne))]
+        for _ in range(num_shards - 1):
+            out.append((self.num_keys, self.num_keys, slice(ne, ne)))
+        return out
+
+
+def test_shard_tile_fires_when_width_exceeds_tile():
+    plan = chain_plan()
+    prep = plan.prep
+    root = prep.decomposition.root
+    attr = prep.schema.group_of[root]
+    view = prep.csr_view(root, (attr,))
+    assert view.num_keys >= 2, "fixture needs a non-trivial key space"
+    prep._csr_cache[(root, (attr,))] = _WideShardView(
+        attrs=view.attrs, keys=view.keys, order=view.order, num_keys=view.num_keys
+    )
+    bad = dataclasses.replace(plan, mesh=2)
+    diags = bad.verify(strict=False)
+    assert any(d.code == "V-SHARD-TILE" for d in diags), [str(d) for d in diags]
+
+
+def test_sentinel_fires_on_aliasing_hop_key():
+    from repro.core.distributed import build_distributed_program
+
+    plan = chain_plan()
+    prog = build_distributed_program(plan.prep, (None,), mesh=1)
+    assert verify_distributed_program(prog) == []
+    hop = next(h for h in prog.hops if f"k:{h.rel}" in prog.inputs)
+    keys = np.array(prog.inputs[f"k:{hop.rel}"], copy=True)
+    keys.flat[0] = hop.knum + 7  # outside [0, knum) and not the sentinel
+    prog.inputs[f"k:{hop.rel}"] = keys
+    diags = verify_distributed_program(prog)
+    assert any(
+        d.code == "V-SENTINEL" and d.site == f"distributed/{hop.rel}"
+        for d in diags
+    )
+
+
+# ----------------------------------------------------------------------
+# accumulator overflow
+# ----------------------------------------------------------------------
+
+
+def test_overflow_fires_past_f32_exact_limit():
+    plan = chain_plan()
+    assert check_overflow(plan.prep, "jax") == []
+    root = plan.prep.decomposition.root
+    plan.prep.stats.relations[root].rows = 10**9
+    diags = check_overflow(plan.prep, "jax")
+    assert any(
+        d.code == "V-OVERFLOW" and "16777216" in d.message for d in diags
+    )
+    # the f64 tensor engine tolerates the same estimate
+    assert check_overflow(plan.prep, "tensor") == []
+
+
+# ----------------------------------------------------------------------
+# GHD plans
+# ----------------------------------------------------------------------
+
+
+def test_ghd_cover_fires_on_uncovered_relation():
+    plan = tri_plan()
+    gp = plan.ghd_plan
+    rel = next(iter(gp.edges))
+    gp.edges = {**gp.edges, rel: frozenset(gp.edges[rel]) | {"zz"}}
+    diags = plan.verify(strict=False)
+    assert any(
+        d.code == "V-GHD-COVER" and d.site == f"ghd/{rel}" for d in diags
+    )
+
+
+def test_ghd_rip_fires_on_detached_bag():
+    plan = tri_plan()
+    ghd = plan.ghd_plan.ghd
+    child = next(b for b in ghd.order if ghd.bags[b].parent is not None)
+    ghd.bags[child].parent = None  # detach: shared attrs now disconnected
+    assert "V-GHD-RIP" in codes_of(plan)
+
+
+def test_ghd_group_fires_on_double_hosted_bag():
+    plan = tri_plan()
+    gp = plan.ghd_plan
+    (grel, gattr), = gp.query.group_by
+    bag = gp.ghd.cover_of[grel]
+    other = next(r for r in gp.ghd.cover_of if r != grel)
+    gp.ghd.cover_of[other] = bag  # second group relation lands in the bag
+    gp.query = dataclasses.replace(
+        gp.query, group_by=((grel, gattr), (other, "a"))
+    )
+    assert "V-GHD-GROUP" in codes_of(plan)
+
+
+# ----------------------------------------------------------------------
+# sparse programs, strict mode, clean fixtures
+# ----------------------------------------------------------------------
+
+
+def test_sparse_program_measure_fires_on_payloadless_channel():
+    from repro.core.jax_engine import build_sparse_program
+
+    plan = chain_plan()
+    prog = build_sparse_program(plan.prep, (None, "R2"))
+    assert verify_sparse_program(prog) == []
+    bad = dataclasses.replace(prog, channel_measures=(None, "R1"))
+    diags = verify_sparse_program(bad)
+    assert any(d.code == "V-CHAN-MEASURE" for d in diags)
+
+
+def test_strict_verify_raises_with_diagnostics():
+    plan = chain_plan()
+    plan.prep.encoded["R2"].codes[0, 0] = -5
+    with pytest.raises(PlanInvariantError) as ei:
+        plan.verify()
+    assert "V-CODES" in str(ei.value)
+    assert ei.value.diagnostics
+
+
+def test_verify_on_compile_env_hook(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    assert chain_plan().verify(strict=False) == []
+
+
+def test_unbroken_fixtures_verify_clean():
+    for make in (chain_plan, skew_plan, tri_plan):
+        diags = make().verify(strict=False)
+        assert diags == [], [str(d) for d in diags]

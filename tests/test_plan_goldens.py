@@ -35,3 +35,28 @@ def test_plan_goldens_match():
         "regenerate with `python -m benchmarks.plan_goldens --write`\n"
         f"{res.stdout[-6000:]}\n{res.stderr[-2000:]}"
     )
+
+
+def test_skewchain_split_plan_verifies_clean():
+    """The catalog's per-split plan passes every verifier invariant —
+    including the V-SPLIT-* partition checks only split plans exercise."""
+    from repro.api.builder import Q
+    from repro.data.queries import skewed_chain_like
+
+    db, q = skewed_chain_like(600, seed=0)
+    plan = Q.from_query(q).engine("jax").plan(db)
+    assert plan.split is not None, "SKEWCHAIN golden scale must split"
+    diags = plan.verify(strict=False)
+    assert diags == [], [str(d) for d in diags]
+
+
+def test_mesh8_distributed_plan_verifies_clean():
+    """A mesh=8 catalog plan passes the V-SHARD-* partition and tile
+    checks (host-side shard arithmetic — no devices needed)."""
+    from repro.api.builder import Q
+    from repro.data.queries import tpch_like
+
+    db, q = tpch_like(600, seed=0)
+    plan = Q.from_query(q).engine("jax").mesh(8).plan(db)
+    diags = plan.verify(strict=False)
+    assert diags == [], [str(d) for d in diags]

@@ -1,0 +1,81 @@
+"""Property tests (hypothesis): randomly generated acyclic plans verify
+clean — the verifier's invariants hold for everything the planner
+actually emits, not just the hand-picked catalog (DESIGN.md §11)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dependency
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # randomized examples; run via `-m slow`
+
+from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+from repro.api import Q
+from repro.relational.relation import Database
+
+SMALL = st.integers(min_value=2, max_value=5)
+
+
+@st.composite
+def acyclic_case(draw):
+    """Random star/chain mix (mirrors test_property_sparse): a 3-chain
+    plus an optional branch relation off the middle node."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n = draw(st.integers(5, 60))
+    gdom, jdom = draw(SMALL), draw(SMALL)
+    mapping = {
+        "R1": {"g1": rng.integers(0, gdom, n), "p0": rng.integers(0, jdom, n)},
+        "R2": {
+            "p0": rng.integers(0, jdom, n),
+            "p1": rng.integers(0, jdom, n),
+            "m": rng.integers(1, 16, n),
+        },
+        "R3": {"p1": rng.integers(0, jdom, n), "g2": rng.integers(0, gdom, n)},
+    }
+    rels = ["R1", "R2", "R3"]
+    if draw(st.booleans()):
+        mapping["R2"]["p2"] = rng.integers(0, jdom, n)
+        mapping["R4"] = {
+            "p2": rng.integers(0, jdom, n),
+            "g3": rng.integers(0, gdom, n),
+        }
+        rels.append("R4")
+    db = Database.from_mapping(mapping)
+    group_by = [("R1", "g1"), ("R3", "g2")]
+    if "R4" in rels:
+        group_by.append(("R4", "g3"))
+    aggs = dict(
+        count=Count(),
+        total=Sum("R2.m"),
+        lo=Min("R2.m"),
+        hi=Max("R2.m"),
+        mean=Avg("R2.m"),
+    )
+    return db, tuple(rels), tuple(group_by), aggs
+
+
+@settings(max_examples=25, deadline=None)
+@given(acyclic_case(), st.sampled_from(["tensor", "jax"]))
+def test_random_acyclic_plans_verify_clean(case, engine):
+    db, rels, group_by, aggs = case
+    plan = Q.over(*rels).group_by(*group_by).agg(**aggs).engine(engine).plan(db)
+    diags = plan.verify(strict=False)
+    assert diags == [], [str(d) for d in diags]
+
+
+@settings(max_examples=10, deadline=None)
+@given(acyclic_case(), st.integers(min_value=1, max_value=9))
+def test_random_meshed_plans_verify_clean(case, shards):
+    """The planned V-SHARD-* arithmetic holds for any shard count,
+    including meshes wider than the key domain (empty trailing shards)."""
+    db, rels, group_by, aggs = case
+    plan = (
+        Q.over(*rels)
+        .group_by(*group_by)
+        .agg(**aggs)
+        .engine("jax")
+        .mesh(shards)
+        .plan(db)
+    )
+    diags = plan.verify(strict=False)
+    assert diags == [], [str(d) for d in diags]
