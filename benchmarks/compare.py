@@ -187,6 +187,39 @@ def serving_delta_lines(fresh: dict[str, dict]) -> list[str]:
     return lines
 
 
+def storage_delta_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-14 in-memory vs mmap prepare/execute summary as markdown."""
+    prep_m = fresh.get("table14,CHAIN,prepare_mmap")
+    prep_i = fresh.get("table14,CHAIN,prepare_inmem")
+    if not (prep_m and prep_i):
+        return ["_no table-14 records in this run_"]
+    lines = [
+        "| metric | in-memory | mmap |",
+        "|---|---:|---:|",
+        f"| prepare peak (MB) | {derived_field(prep_i, 'peak_mb')} | "
+        f"{derived_field(prep_m, 'peak_mb')} |",
+        f"| prepare peak / largest column | "
+        f"{derived_field(prep_i, 'peak_over_col')}x | "
+        f"{derived_field(prep_m, 'peak_over_col')}x |",
+        f"| prepare (µs) | {prep_i['us_per_call']:.0f} | "
+        f"{prep_m['us_per_call']:.0f} |",
+    ]
+    ex_i = fresh.get("table14,CHAIN,execute_inmem")
+    ex_m = fresh.get("table14,CHAIN,execute_mmap")
+    if ex_i and ex_m:
+        lines.append(
+            f"| execute (µs) | {ex_i['us_per_call']:.0f} | "
+            f"{ex_m['us_per_call']:.0f} |"
+        )
+    lines.append(
+        f"\nmmap prepare holds "
+        f"**{derived_field(prep_m, 'ram_over_mmap_peak')}** less RAM than "
+        f"the in-memory path (chunk_rows="
+        f"{derived_field(prep_m, 'chunk_rows')})"
+    )
+    return lines
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -289,6 +322,10 @@ def main(argv: list[str] | None = None) -> int:
         "### Statistics-driven planner (table 13)",
         "",
         *estimation_lines(fresh),
+        "",
+        "### Out-of-core storage tier (table 14)",
+        "",
+        *storage_delta_lines(fresh),
         "",
     ]
     if failures:

@@ -13,7 +13,9 @@ import argparse
 
 from benchmarks import common, tables
 
-TABLES = ["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13"]
+TABLES = [
+    "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
+]
 
 
 def main() -> None:
@@ -62,6 +64,8 @@ def main() -> None:
         tables.table12_serving(n_chain, verify)
     if run_all or args.table == "13":
         tables.table13_planner(n_real, verify)
+    if run_all or args.table == "14":
+        tables.table14_storage(n_chain, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
 

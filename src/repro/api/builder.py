@@ -28,6 +28,28 @@ from repro.api.plan import Plan, Predicate, compile_plan
 from repro.core.query import JoinAggQuery
 from repro.relational.relation import Database
 
+
+def _as_database(db) -> Database:
+    """One ingestion surface (DESIGN.md §12): a ``Database`` passes
+    through, a mapping of named sources/column-dicts wraps via
+    ``Database.from_sources``, and a filesystem path mounts a stored
+    database directory (disk-backed, streaming prepare)."""
+    import os
+    from pathlib import Path
+
+    if isinstance(db, Database):
+        return db
+    if isinstance(db, (str, Path, os.PathLike)):
+        from repro.storage import open_database
+
+        return open_database(db)
+    if hasattr(db, "items"):
+        return Database.from_sources(db)
+    raise TypeError(
+        f"cannot plan against {type(db).__name__}; pass a Database, a "
+        "mapping of relation sources, or a stored-database path"
+    )
+
 _OPS: dict[str, Callable] = {
     "==": lambda c, v: c == v,
     "!=": lambda c, v: c != v,
@@ -192,7 +214,9 @@ class Q:
 
     def memory_budget(self, nbytes: int) -> "Q":
         """Peak-message budget before group-axis streaming kicks in
-        (streaming-capable engines only; others raise at plan time)."""
+        (streaming-capable engines only; others raise at plan time).
+        For disk-backed sources it also bounds prepare-time peak memory
+        by shrinking the streaming chunk size (DESIGN.md §12)."""
         return replace(self, budget=int(nbytes))
 
     def stream(self, attr: str, tile: int) -> "Q":
@@ -213,21 +237,23 @@ class Q:
         return replace(self, stats_opt=bool(enabled))
 
     # ------------------------------------------------------------------
-    def plan(self, db: Database) -> Plan:
+    def plan(self, db) -> Plan:
         """Compile against ``db``: logical rewrites, cost-based root /
-        GHD choice, channelization.  See :func:`repro.api.plan.compile_plan`."""
-        return compile_plan(self, db)
+        GHD choice, channelization.  ``db`` is a :class:`Database`, a
+        mapping of named relation sources, or a stored-database path.
+        See :func:`repro.api.plan.compile_plan`."""
+        return compile_plan(self, _as_database(db))
 
-    def execute(self, db: Database):
+    def execute(self, db):
         """``plan(db).execute()`` in one call."""
         return self.plan(db).execute()
 
-    def maintain(self, db: Database):
+    def maintain(self, db):
         """Maintenance handle without paying for the physical stage: the
         incremental maintainer prepares its own growable state, so root
         search / GHD bag materialization are skipped (logical rewrites
         and option validation still run)."""
-        return compile_plan(self, db, physical=False).maintain()
+        return compile_plan(self, _as_database(db), physical=False).maintain()
 
     # ------------------------------------------------------------------
     def _check_rel(self, relation: str) -> None:

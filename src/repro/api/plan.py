@@ -47,6 +47,14 @@ from repro.core.operator import (
 from repro.core.prepare import Prepared, encode_query, finish_prepare
 from repro.core.query import JoinAggQuery, resolve_schema
 from repro.relational.relation import Database, Relation
+from repro.relational.source import (
+    copy_column_source,
+    estimate_prepare_peak,
+    filter_source,
+    rename_source,
+    resolve_chunk_rows,
+    storage_kind,
+)
 
 COPY_SUFFIX = "__grp"
 
@@ -138,6 +146,10 @@ class Plan:
     # False when the spec disabled statistics-driven planning (byte
     # heuristics only — the baseline side of the table-13 A/B)
     stats_enabled: bool = True
+    # effective streaming chunk size used at prepare time; None = the
+    # whole-column in-RAM fast path (purely in-memory sources,
+    # DESIGN.md §12)
+    chunk_rows: int | None = None
 
     # ------------------------------------------------------------------
     def _require_physical(self) -> None:
@@ -338,6 +350,20 @@ class Plan:
                 f"stream: tile group attr {stream[0]!r} × {stream[1]} "
                 f"(memory budget "
                 f"{_fmt_bytes(self.memory_budget or DEFAULT_MEMORY_BUDGET)})"
+            )
+        sources = [self.db[r] for r in self.query.relations]
+        mode = (
+            "whole-column"
+            if self.chunk_rows is None
+            else f"chunked ({self.chunk_rows} rows/chunk)"
+        )
+        lines.append(
+            f"storage: {mode}, est prepare peak "
+            f"{_fmt_bytes(estimate_prepare_peak(sources, self.chunk_rows))}"
+        )
+        for rname, src in zip(self.query.relations, sources):
+            lines.append(
+                f"  {rname}: {storage_kind(src)} ({src.num_rows} rows)"
             )
         if not self.stats_enabled:
             lines.append("stats: disabled (byte-heuristic planning)")
@@ -580,6 +606,11 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         raise ValueError(f"aggregate names collide with group columns: {sorted(clash)}")
 
     stats_on = bool(getattr(spec, "stats_opt", True))
+    # one chunking decision per plan: explicit env override, else derived
+    # from the memory budget when any source is disk-backed (DESIGN.md §12)
+    chunk_rows = resolve_chunk_rows(
+        [edb[r] for r in rel_names], memory_budget=spec.budget
+    )
     ghd_plan = None
     prep = None
     root_notes: tuple[str, ...] = ()
@@ -598,7 +629,9 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
                 return prep.measure_moves.get(rel, rel)
 
         else:
-            prep, root_notes = _best_root(query0, edb, measures, use_stats=stats_on)
+            prep, root_notes = _best_root(
+                query0, edb, measures, use_stats=stats_on, chunk_rows=chunk_rows
+            )
 
             def resolve_rel(rel: str) -> str:
                 return prep.measure_moves.get(rel, rel)
@@ -643,6 +676,7 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         mesh=getattr(spec, "mesh_opt", None),
         split=split,
         stats_enabled=stats_on,
+        chunk_rows=chunk_rows,
     )
     if physical and _verify_on_compile():
         plan.verify()  # debug-mode assert (DESIGN.md §11)
@@ -668,7 +702,7 @@ def _apply_aliases(spec, db: Database, notes: list[str]) -> Database:
         if name == source and not mapping:
             edb.add(db[source])
             continue
-        edb.add(db[source].renamed(name, mapping))
+        edb.add(rename_source(db[source], name, mapping))
         if name != source:
             note = f"alias {name} := {source}"
             if mapping:
@@ -684,9 +718,8 @@ def _apply_predicates(spec, edb: Database, notes: list[str]) -> Database:
         if pred.relation not in edb:
             raise KeyError(f"where: relation {pred.relation!r} not in query")
         rel = edb[pred.relation]
-        mask = np.asarray(pred.fn(rel.columns))
         before = rel.num_rows
-        filtered = rel.filter(mask)
+        filtered = filter_source(rel, pred.fn)
         edb.add(filtered)
         notes.append(
             f"where {pred.relation}: {pred.label} "
@@ -742,7 +775,7 @@ def _copy_joining_group_attrs(rel_names, edb: Database, group_by, notes: list[st
         while copy in used:
             copy += "_"
         used.add(copy)
-        edb.add(edb[rel].with_column(copy, edb[rel].columns[attr]))
+        edb.add(copy_column_source(edb[rel], copy, attr))
         out_group_by.append((rel, copy))
         joined_in = sorted(r for r in rel_names if attr in edb[r].attrs)
         notes.append(
@@ -757,6 +790,7 @@ def _best_root(
     db: Database,
     measures: dict[str, str],
     use_stats: bool = True,
+    chunk_rows: int | None = None,
 ) -> tuple[Prepared, tuple[str, ...]]:
     """Cost-based root search: encode once, fold/decompose per candidate
     group-relation root, rank by the statistics-refined cost model
@@ -764,7 +798,9 @@ def _best_root(
     heuristic when ``use_stats`` is off.  Every rejected root's reason is
     kept for ``explain()`` and errors."""
     schema = resolve_schema(query, db)
-    dicts, encoded = encode_query(query, db, schema, measures=measures)
+    dicts, encoded = encode_query(
+        query, db, schema, measures=measures, chunk_rows=chunk_rows
+    )
     best: tuple[Prepared, tuple] | None = None
     failures: list[str] = []
     stats = None

@@ -108,9 +108,11 @@ class MaintainedJoinAgg:
         relation's raw tuples so deletes can rebuild them."""
         self.raw: dict[str, np.ndarray] | None = None
         if self.kind in ("min", "max"):
+            from repro.relational.source import materialize_columns
+
             rel, attr = query.agg.measure
             self.raw = {
-                a: np.asarray(c).copy() for a, c in db[rel].columns.items()
+                a: c.copy() for a, c in materialize_columns(db[rel]).items()
             }
 
     def _init_acyclic(self, query: JoinAggQuery, db: Database) -> None:

@@ -2,14 +2,18 @@
 
 The paper's prototype reads sorted tuples out of PostgreSQL over JDBC;
 here a :class:`Relation` is a dict of equal-length numpy columns and a
-:class:`Database` is a named collection of them.  Loading, projection and
-bag-semantics duplicate handling (the paper's load-time *pre-aggregation*,
-Section III-E) all operate on these.
+:class:`Database` is a named collection of *relation sources*
+(DESIGN.md §12).  A plain :class:`Relation` is the trivial
+:class:`~repro.relational.source.RelationSource` — one in-RAM chunk;
+disk-backed relations live in :mod:`repro.storage` and stream through
+the same protocol.  Loading, projection and bag-semantics duplicate
+handling (the paper's load-time *pre-aggregation*, Section III-E) all
+operate on these.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, Mapping
+from typing import Iterable, Iterator, Mapping
 
 import numpy as np
 
@@ -20,6 +24,8 @@ class Relation:
 
     name: str
     columns: dict[str, np.ndarray]
+
+    storage_kind = "memory"
 
     def __post_init__(self) -> None:
         lengths = {len(col) for col in self.columns.values()}
@@ -88,20 +94,47 @@ class Relation:
             raise ValueError(f"rows shape {rows.shape} != (n, {len(attrs)})")
         return Relation(name, {a: rows[:, i] for i, a in enumerate(attrs)})
 
+    # -- RelationSource protocol (the trivial in-memory source) ---------
+    def iter_chunks(
+        self,
+        columns: tuple[str, ...] | None = None,
+        chunk_rows: int | None = None,
+    ) -> Iterator[dict[str, np.ndarray]]:
+        """Stream row ranges as column dicts; one chunk when unbounded."""
+        attrs = tuple(columns) if columns is not None else self.attrs
+        missing = set(attrs) - set(self.columns)
+        if missing:
+            raise KeyError(f"relation {self.name!r} has no attrs {sorted(missing)}")
+        n = self.num_rows
+        step = n if chunk_rows is None else max(int(chunk_rows), 1)
+        for start in range(0, n, step) if n else ():
+            stop = min(start + step, n)
+            yield {a: self.columns[a][start:stop] for a in attrs}
+
+    def open_column(self, attr: str) -> np.ndarray:
+        return self.columns[attr]
+
 
 @dataclass
 class Database:
-    """A named collection of relations."""
+    """A named collection of relation sources.
 
-    relations: dict[str, Relation] = field(default_factory=dict)
+    Values are anything speaking the
+    :class:`~repro.relational.source.RelationSource` protocol: plain
+    in-memory :class:`Relation`\\ s, disk-backed
+    :class:`~repro.storage.store.StoredRelation`\\ s, or the planner's
+    lazy rewrite wrappers.  ``from_mapping`` stays the thin eager
+    adapter; ``from_sources`` is the unified ingestion spelling."""
 
-    def __getitem__(self, name: str) -> Relation:
+    relations: dict[str, "Relation"] = field(default_factory=dict)
+
+    def __getitem__(self, name: str):
         return self.relations[name]
 
     def __contains__(self, name: str) -> bool:
         return name in self.relations
 
-    def add(self, rel: Relation) -> "Database":
+    def add(self, rel) -> "Database":
         self.relations[rel.name] = rel
         return self
 
@@ -110,4 +143,15 @@ class Database:
         db = Database()
         for name, cols in mapping.items():
             db.add(Relation(name, dict(cols)))
+        return db
+
+    @staticmethod
+    def from_sources(mapping: Mapping[str, object]) -> "Database":
+        """Named sources of any spelling (RelationSource, Relation, or a
+        column mapping) — the one ingestion surface (DESIGN.md §12)."""
+        from repro.relational.source import as_source
+
+        db = Database()
+        for name, obj in mapping.items():
+            db.add(as_source(obj, name))
         return db

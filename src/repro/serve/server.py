@@ -29,9 +29,12 @@ from __future__ import annotations
 import json
 import socketserver
 import threading
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
+from pathlib import Path
 
 from repro.relational.relation import Database, Relation
+from repro.relational.source import as_source, is_source
 from repro.serve import wire
 from repro.serve.batcher import FusionBatcher, _Pending, run_group
 from repro.serve.cache import PlanCache, plan_shape_key
@@ -49,8 +52,20 @@ class JoinAggServer:
         plan_cache_size: int = 64,
         fusion_window: float = 0.002,
         fuse: bool = True,
+        storage_dir: "str | Path | None" = None,
     ):
+        """``storage_dir`` turns on write-through registration
+        (DESIGN.md §12): registered relations are streamed to
+        ``storage_dir/<name>/`` and served from the disk-backed copy,
+        and maintained-view insert deltas append to the store."""
+        if db is None and storage_dir is not None:
+            catalog = Path(storage_dir) / "db.json"
+            if catalog.is_file():
+                from repro.storage import open_database
+
+                db = open_database(storage_dir)
         self._db = db if db is not None else Database()
+        self._storage_dir = Path(storage_dir) if storage_dir is not None else None
         self._generation = 0
         # bumped whenever the statistics a cached plan was chosen on may
         # have changed (every registration changes the data the sketches
@@ -91,16 +106,34 @@ class JoinAggServer:
     def register(self, name: str, columns) -> int:
         """Register (or replace) a relation; returns the new generation.
 
+        ``columns`` is anything speaking the
+        :class:`~repro.relational.source.RelationSource` protocol — an
+        in-memory ``Relation``, a disk-backed ``StoredRelation``, or a
+        column mapping (the legacy eager-copy spelling, deprecated).
         The database is swapped, not mutated: queries already compiled
         keep their snapshot, and the generation bump makes every cached
         plan key unreachable so the next lookup recompiles on new data.
         """
-        rel = columns if isinstance(columns, Relation) else Relation(
-            name, {a: c for a, c in wire.columns_from_json(columns).items()}
-            if isinstance(columns, dict) else dict(columns)
-        )
-        if rel.name != name:
-            rel = Relation(name, dict(rel.columns))
+        if not is_source(columns):
+            warnings.warn(
+                "registering a raw column mapping copies it eagerly; pass "
+                "a Relation / RelationSource (one ingestion surface, "
+                "DESIGN.md §12)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if isinstance(columns, dict):
+                columns = {
+                    a: c for a, c in wire.columns_from_json(columns).items()
+                }
+            else:
+                columns = dict(columns)
+        rel = as_source(columns, name)
+        if self._storage_dir is not None:
+            from repro.storage import write_relation
+
+            rel = write_relation(rel, self._storage_dir / name)
+            self._write_catalog(name)
         with self._db_lock:
             new_db = Database(dict(self._db.relations))
             new_db.add(rel)
@@ -108,6 +141,18 @@ class JoinAggServer:
             self._generation += 1
             self._stats_generation += 1
             return self._generation
+
+    def _write_catalog(self, name: str) -> None:
+        """Refresh ``storage_dir/db.json`` after a write-through
+        registration so the directory stays mountable via
+        ``storage.open_database``."""
+        from repro.storage.database import CATALOG_NAME, CATALOG_VERSION
+
+        names = sorted(set(self._db.relations) | {name})
+        doc = {"version": CATALOG_VERSION, "relations": names}
+        tmp = self._storage_dir / (CATALOG_NAME + ".tmp")
+        tmp.write_text(json.dumps(doc, indent=2) + "\n")
+        tmp.replace(self._storage_dir / CATALOG_NAME)
 
     # -- queries --------------------------------------------------------
     def submit(self, spec) -> Future:
@@ -148,11 +193,25 @@ class JoinAggServer:
         and serve it under ``name`` via epoch-swapped snapshots."""
         plan = self._lookup_plan(spec)
         handle = plan.maintain()
+        on_applied = self._persist_delta if self._storage_dir is not None else None
         with self._views_lock:
             if name in self._views:
                 raise ValueError(f"view {name!r} already exists")
-            view = self._views[name] = ServedView(name, handle)
+            view = self._views[name] = ServedView(name, handle, on_applied)
         return view
+
+    def _persist_delta(self, op: str, rel: str, cols) -> None:
+        """Write-through for maintained-view deltas: insert batches append
+        to the relation's on-disk store (deletes only adjust the
+        maintained state — the append-only column files keep history)."""
+        if op != "insert":
+            return
+        from repro.storage.store import StoredRelation
+
+        with self._db_lock:
+            target = self._db.relations.get(rel)
+        if isinstance(target, StoredRelation):
+            target.append(cols)
 
     def view(self, name: str) -> ServedView:
         with self._views_lock:
@@ -245,7 +304,8 @@ class _Handler(socketserver.StreamRequestHandler):
             spec = wire.q_from_spec(req["q"])
             return {"ok": True, "result": wire.result_to_json(core.query(spec))}
         if op == "register":
-            gen = core.register(req["name"], req["columns"])
+            rel = Relation(req["name"], wire.columns_from_json(req["columns"]))
+            gen = core.register(req["name"], rel)
             return {"ok": True, "generation": gen}
         if op == "view_create":
             view = core.create_view(req["name"], wire.q_from_spec(req["q"]))

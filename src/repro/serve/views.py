@@ -64,9 +64,14 @@ class _Delta:
 class ServedView:
     """A maintained JOIN-AGG view served from epoch-swapped snapshots."""
 
-    def __init__(self, name: str, handle):
+    def __init__(self, name: str, handle, on_applied=None):
         self.name = name
         self.handle = handle
+        # optional persistence hook ``on_applied(op, rel, cols)`` invoked
+        # from the writer thread after each successfully-applied batch —
+        # the serving layer's write-through to the storage tier
+        # (DESIGN.md §12); a hook failure fails that batch's future
+        self._on_applied = on_applied
         # published by one reference store, read without a lock — readers
         # see either the old or the new fully-built snapshot, never torn
         self._snap = ViewSnapshot(0, self._copy_result())
@@ -139,6 +144,8 @@ class ServedView:
                 continue
             try:
                 getattr(self.handle, item.op)(item.rel, item.cols)
+                if self._on_applied is not None:
+                    self._on_applied(item.op, item.rel, item.cols)
                 snap = ViewSnapshot(self._snap.epoch + 1, self._copy_result())
                 self._snap = snap  # atomic publish: one reference store
                 item.future.set_result(snap.epoch)

@@ -9,6 +9,7 @@ from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
 from repro.api.builder import Q
 from repro.api.plan import compile_plan
 from repro.data.synth import chain
+from repro.relational.relation import Relation
 from repro.serve.server import JoinAggServer, serve_tcp
 from repro.serve.session import Session, connect
 
@@ -125,9 +126,12 @@ def test_register_bumps_generation_and_serves_new_data(db):
     with JoinAggServer(db, workers=2, fuse=False) as srv:
         before = srv.query(q)
         assert srv.plan_cache.stats.compiles == 1
-        # double R1: every group count doubles
+        # double R1: every group count doubles (raw column mappings are
+        # the deprecated eager-copy spelling — pass a Relation)
         r1 = srv.db["R1"]
-        doubled = {a: np.concatenate([c, c]) for a, c in r1.columns.items()}
+        doubled = Relation(
+            "R1", {a: np.concatenate([c, c]) for a, c in r1.columns.items()}
+        )
         gen = srv.register("R1", doubled)
         after = srv.query(q)
         assert srv.plan_cache.stats.compiles == 2  # old plan unreachable

@@ -1,0 +1,538 @@
+"""Out-of-core storage tier (repro.storage, DESIGN.md §12): manifest and
+column-file round-trips, the external chunked key-sort, streaming
+encode/dictionary equality with the in-RAM path, the RelationSource
+ingestion adapters, and the V-STORE-CSR verifier invariant."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.aggregates.semiring import Count, Sum
+from repro.api.builder import Q
+from repro.core.prepare import grouped_csr, grouped_csr_external, prepare
+from repro.core.query import JoinAggQuery
+from repro.relational.encoding import (
+    build_dictionaries,
+    encode_relation,
+    encode_relation_streaming,
+)
+from repro.relational.relation import Database, Relation
+from repro.relational.source import (
+    as_source,
+    copy_column_source,
+    estimate_prepare_peak,
+    filter_source,
+    is_disk_backed,
+    rename_source,
+    resolve_chunk_rows,
+    storage_kind,
+)
+from repro.storage import (
+    merge_runs,
+    open_database,
+    open_relation,
+    read_manifest,
+    sort_chunks_to_runs,
+    write_database,
+    write_relation,
+    write_run,
+)
+from repro.storage.sort import KEY, Run, SpillWriter
+
+RNG = np.random.default_rng(11)
+
+
+def make_rel(n=500, seed=3):
+    rng = np.random.default_rng(seed)
+    return Relation(
+        "R",
+        {
+            "a": rng.integers(0, 40, n),
+            "b": rng.integers(0, 9, n).astype(np.int32),
+            "m": rng.integers(0, 50, n).astype(np.float64),
+        },
+    )
+
+
+def chain_db(n=600, seed=5):
+    rng = np.random.default_rng(seed)
+    return Database.from_mapping(
+        {
+            "R1": {"g1": rng.integers(0, 6, n), "p0": rng.integers(0, 30, n)},
+            "R2": {
+                "p0": rng.integers(0, 30, n),
+                "p1": rng.integers(0, 30, n),
+                "m": rng.integers(0, 40, n).astype(np.float64),
+            },
+            "R3": {"p1": rng.integers(0, 30, n), "g2": rng.integers(0, 6, n)},
+        }
+    )
+
+
+# ----------------------------------------------------------------------
+# store: write/open/append round-trips
+# ----------------------------------------------------------------------
+
+
+def test_relation_roundtrip_preserves_data_and_dtypes(tmp_path):
+    rel = make_rel()
+    stored = write_relation(rel, tmp_path / "R")
+    opened = open_relation(tmp_path / "R")
+    assert opened.name == "R" and opened.attrs == rel.attrs
+    assert opened.num_rows == rel.num_rows
+    for a in rel.attrs:
+        col = opened.open_column(a)
+        assert isinstance(col, np.memmap)
+        assert col.dtype == rel.columns[a].dtype
+        assert np.array_equal(col, rel.columns[a])
+    assert stored.storage_kind == "mmap" and is_disk_backed(opened)
+
+
+def test_manifest_certifies_sorted_columns(tmp_path):
+    rel = Relation(
+        "S", {"k": np.arange(100), "v": RNG.integers(0, 5, 100)}
+    )
+    write_relation(rel, tmp_path / "S", chunk_rows=7)  # cross-chunk edges
+    stored = open_relation(tmp_path / "S")
+    assert stored.sorted_by("k")
+    assert not stored.sorted_by("v")
+
+
+def test_zero_row_relation_roundtrip(tmp_path):
+    rel = Relation("Z", {"a": np.zeros(0, np.int64), "b": np.zeros(0)})
+    write_relation(rel, tmp_path / "Z")
+    opened = open_relation(tmp_path / "Z")
+    assert opened.num_rows == 0 and opened.attrs == ("a", "b")
+    assert len(opened.open_column("a")) == 0
+    assert list(opened.iter_chunks()) == []
+
+
+def test_open_relation_detects_truncated_column(tmp_path):
+    write_relation(make_rel(50), tmp_path / "R")
+    (tmp_path / "R" / "a.bin").write_bytes(b"\0" * 8)
+    with pytest.raises(ValueError, match="8 bytes"):
+        open_relation(tmp_path / "R")
+
+
+def test_append_extends_store_and_clears_sort_flags(tmp_path):
+    rel = Relation("S", {"k": np.arange(20), "v": np.arange(20.0)})
+    stored = write_relation(rel, tmp_path / "S")
+    assert stored.sorted_by("k")
+    stored.append({"k": np.array([5, 1]), "v": np.array([9.0, 9.0])})
+    assert stored.num_rows == 22
+    assert not stored.sorted_by("k")
+    assert np.array_equal(stored.open_column("k")[-2:], [5, 1])
+    # the manifest on disk agrees — a fresh mount sees the appended rows
+    assert open_relation(tmp_path / "S").num_rows == 22
+    with pytest.raises(ValueError, match="must cover attrs"):
+        stored.append({"k": np.array([1])})
+    with pytest.raises(ValueError, match="ragged"):
+        stored.append({"k": np.array([1]), "v": np.zeros(2)})
+
+
+def test_database_roundtrip(tmp_path):
+    db = chain_db()
+    write_database(db, tmp_path / "db")
+    db2 = open_database(tmp_path / "db")
+    assert sorted(db2.relations) == sorted(db.relations)
+    for r in db.relations:
+        for a in db[r].attrs:
+            assert np.array_equal(db2[r].open_column(a), db[r].columns[a])
+
+
+# ----------------------------------------------------------------------
+# external chunked key-sort
+# ----------------------------------------------------------------------
+
+
+def _external_argsort(keys, chunk, block):
+    """Reference harness: chunked runs + blocked k-way merge."""
+    import tempfile
+    from pathlib import Path
+
+    n = len(keys)
+    with tempfile.TemporaryDirectory() as td:
+
+        def chunks():
+            for s in range(0, n, chunk):
+                e = min(s + chunk, n)
+                yield {KEY: keys[s:e], "idx": np.arange(s, e, dtype=np.int64)}
+
+        runs = sort_chunks_to_runs(Path(td), chunks())
+        out_k, out_i = [], []
+        for batch in merge_runs(runs, block_rows=block):
+            out_k.append(np.asarray(batch[KEY]).copy())
+            out_i.append(np.asarray(batch["idx"]).copy())
+        return (
+            np.concatenate(out_k) if out_k else np.zeros(0, np.int64),
+            np.concatenate(out_i) if out_i else np.zeros(0, np.int64),
+        )
+
+
+@pytest.mark.parametrize("chunk,block", [(64, 16), (17, 5), (1000, 8)])
+def test_merge_matches_stable_argsort(chunk, block):
+    keys = RNG.integers(0, 37, 400).astype(np.int64)  # heavy duplicates
+    got_k, got_i = _external_argsort(keys, chunk, block)
+    order = np.argsort(keys, kind="stable")
+    assert np.array_equal(got_i, order)
+    assert np.array_equal(got_k, keys[order])
+
+
+def test_merge_never_splits_a_key_across_batches():
+    keys = np.repeat(np.arange(10, dtype=np.int64), 23)
+    RNG.shuffle(keys)
+    import tempfile
+    from pathlib import Path
+
+    with tempfile.TemporaryDirectory() as td:
+
+        def chunks():
+            for s in range(0, len(keys), 31):
+                e = min(s + 31, len(keys))
+                yield {KEY: keys[s:e], "idx": np.arange(s, e, dtype=np.int64)}
+
+        runs = sort_chunks_to_runs(Path(td), chunks())
+        last_key = -1
+        for batch in merge_runs(runs, block_rows=4):
+            bk = np.asarray(batch[KEY])
+            assert bk[0] > last_key  # no key continues from the prior batch
+            last_key = int(bk[-1])
+
+
+def test_write_run_rejects_unsorted_keys(tmp_path):
+    with pytest.raises(ValueError, match="sorted"):
+        write_run(tmp_path, 0, {KEY: np.array([3, 1], np.int64)})
+
+
+def test_run_reopens_as_memmap(tmp_path):
+    run = write_run(
+        tmp_path, 0, {KEY: np.array([1, 2], np.int64), "v": np.zeros(2)}
+    )
+    assert isinstance(run, Run)
+    views = run.open()
+    assert isinstance(views[KEY], np.memmap)
+    assert np.array_equal(views[KEY], [1, 2])
+
+
+def test_spill_writer_casts_and_handles_empty(tmp_path):
+    w = SpillWriter(tmp_path, "t")
+    w.append({"x": np.array([1, 2], np.int64)})
+    w.append({"x": np.array([3.0, 4.0])})  # cast to the first batch dtype
+    out = w.finish()
+    assert out["x"].dtype == np.int64
+    assert np.array_equal(out["x"], [1, 2, 3, 4])
+    empty = SpillWriter(tmp_path, "e").finish()
+    assert empty == {}
+
+
+# ----------------------------------------------------------------------
+# streaming encode == in-RAM encode
+# ----------------------------------------------------------------------
+
+
+def test_build_dictionaries_chunked_matches_whole():
+    db = chain_db()
+    rels = [db[r] for r in ("R1", "R2", "R3")]
+    attrs = {"g1", "p0", "p1", "g2"}
+    whole = build_dictionaries(rels, attrs)
+    chunked = build_dictionaries(rels, attrs, chunk_rows=13)
+    for a in attrs:
+        assert np.array_equal(whole[a].values, chunked[a].values)
+
+
+@pytest.mark.parametrize("chunk_rows", [7, 64, 10_000])
+def test_encode_streaming_matches_encode(chunk_rows):
+    db = chain_db()
+    rels = [db[r] for r in ("R1", "R2", "R3")]
+    dicts = build_dictionaries(rels, {"g1", "p0", "p1", "g2"})
+    ref = encode_relation(db["R2"], ("p0", "p1"), dicts, "m")
+    got = encode_relation_streaming(
+        db["R2"], ("p0", "p1"), dicts, "m", chunk_rows=chunk_rows
+    )
+    assert got.attrs == ref.attrs
+    assert np.array_equal(np.asarray(got.codes), ref.codes)
+    assert np.array_equal(np.asarray(got.count), ref.count)
+    assert set(got.payloads) == set(ref.payloads)
+    for k in ref.payloads:
+        assert np.array_equal(np.asarray(got.payloads[k]), ref.payloads[k])
+
+
+def test_encode_streaming_empty_relation_keeps_payload_keys():
+    rel = Relation("E", {"a": np.zeros(0, np.int64), "m": np.zeros(0)})
+    carrier = Relation("C", {"a": np.arange(5)})
+    dicts = build_dictionaries([rel, carrier], {"a"})
+    ref = encode_relation(rel, ("a",), dicts, "m")
+    got = encode_relation_streaming(rel, ("a",), dicts, "m", chunk_rows=4)
+    assert got.num_rows == 0
+    assert set(got.payloads) == set(ref.payloads)
+
+
+def test_grouped_csr_external_matches_in_ram():
+    db = chain_db()
+    rels = [db[r] for r in ("R1", "R2", "R3")]
+    dicts = build_dictionaries(rels, {"g1", "p0", "p1", "g2"})
+    er = encode_relation(db["R2"], ("p0", "p1"), dicts, None)
+    dims = (dicts["p0"].size, dicts["p1"].size)
+    ref = grouped_csr(er, ("p0", "p1"), dims)
+    got = grouped_csr_external(er, ("p0", "p1"), dims, chunk_rows=19)
+    assert np.array_equal(np.asarray(got.keys), ref.keys)
+    assert np.array_equal(np.asarray(got.order), ref.order)
+    assert got.num_keys == ref.num_keys
+    assert isinstance(got.keys, np.memmap)
+
+
+# ----------------------------------------------------------------------
+# one ingestion surface: adapters, lazy rewrites, chunking policy
+# ----------------------------------------------------------------------
+
+
+def test_as_source_adapters():
+    rel = make_rel(30)
+    assert as_source(rel) is rel
+    renamed = as_source(rel, "T")
+    assert renamed.name == "T" and np.array_equal(
+        renamed.open_column("a"), rel.columns["a"]
+    )
+    wrapped = as_source({"x": [1, 2, 3]}, "W")
+    assert isinstance(wrapped, Relation) and wrapped.num_rows == 3
+    with pytest.raises(ValueError, match="explicit name"):
+        as_source({"x": [1]})
+    with pytest.raises(TypeError, match="cannot ingest"):
+        as_source(42, "N")
+
+
+def test_database_from_sources_mixes_spellings(tmp_path):
+    stored = write_relation(make_rel(20, seed=1), tmp_path / "R")
+    db = Database.from_sources(
+        {"A": {"x": np.arange(4)}, "B": make_rel(10, seed=2), "C": stored}
+    )
+    assert db["A"].num_rows == 4 and db["B"].name == "B"
+    # a stored relation keyed under a new name becomes a lazy rename view
+    assert storage_kind(db["C"]) == "derived(mmap)"
+    assert is_disk_backed(db["C"])
+
+
+def test_lazy_rewrites_match_eager(tmp_path):
+    rel = make_rel(200, seed=9)
+    stored = write_relation(rel, tmp_path / "R")
+
+    ren = rename_source(stored, "R2", {"a": "aa"})
+    assert storage_kind(ren) == "derived(mmap)"
+    assert ren.attrs == ("aa", "b", "m")
+    assert np.array_equal(ren.open_column("aa"), rel.columns["a"])
+    chunks = list(ren.iter_chunks(("aa", "m"), 64))
+    assert np.array_equal(
+        np.concatenate([c["aa"] for c in chunks]), rel.columns["a"]
+    )
+
+    pred = lambda cols: cols["b"] > 4  # noqa: E731
+    filt = filter_source(stored, pred)
+    eager = rel.filter(pred(rel.columns))
+    assert filt.num_rows == eager.num_rows
+    assert np.array_equal(filt.open_column("m"), eager.columns["m"])
+
+    cp = copy_column_source(stored, "a__grp", "a")
+    assert cp.attrs == ("a", "b", "m", "a__grp")
+    assert np.array_equal(cp.open_column("a__grp"), rel.columns["a"])
+    # eager fast path for plain Relations: stays a Relation
+    assert isinstance(copy_column_source(rel, "c", "a"), Relation)
+    assert isinstance(filter_source(rel, pred), Relation)
+    assert isinstance(rename_source(rel, "Z", {}), Relation)
+
+
+def test_filtered_source_rejects_bad_mask(tmp_path):
+    stored = write_relation(make_rel(10), tmp_path / "R")
+    bad = filter_source(stored, lambda cols: cols["b"] * 1)  # not bool
+    with pytest.raises(ValueError, match="bool"):
+        bad.num_rows
+
+
+def test_resolve_chunk_rows_policy(tmp_path, monkeypatch):
+    rel = make_rel(10)
+    stored = write_relation(rel, tmp_path / "R")
+    assert resolve_chunk_rows([rel]) is None  # in-memory fast path
+    assert resolve_chunk_rows([rel, stored]) == 1 << 18
+    assert resolve_chunk_rows([stored], chunk_rows=500) == 500
+    monkeypatch.setenv("REPRO_CHUNK_ROWS", "77")
+    assert resolve_chunk_rows([rel]) == 77  # env forces chunking anywhere
+    monkeypatch.delenv("REPRO_CHUNK_ROWS")
+    # a budget shrinks the chunk (128 assumed bytes/row), floor 1024
+    assert resolve_chunk_rows([stored], memory_budget=1 << 20) == 8192
+    assert resolve_chunk_rows([stored], memory_budget=1) == 1024
+
+
+def test_estimate_prepare_peak_caps_at_whole_column():
+    rel = make_rel(100)
+    whole = estimate_prepare_peak([rel], None)
+    assert whole == 8 * 3 * 100
+    assert estimate_prepare_peak([rel], 1 << 18) == whole  # tiny data caps
+    assert estimate_prepare_peak([rel], 2) == 2 * 128
+
+
+# ----------------------------------------------------------------------
+# planner surface: explain + verifier
+# ----------------------------------------------------------------------
+
+
+def _plan_on_disk(tmp_path, engine="tensor"):
+    db = chain_db()
+    write_database(db, tmp_path / "db")
+    q = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(n=Count(), s=Sum("R2.m"))
+        .engine(engine)
+    )
+    return q.plan(str(tmp_path / "db"))
+
+
+def test_explain_storage_section(tmp_path):
+    plan = _plan_on_disk(tmp_path)
+    text = plan.explain()
+    assert "storage: chunked" in text
+    assert "est prepare peak" in text
+    assert "R2: mmap" in text
+    # the in-memory twin reports the whole-column fast path
+    mem_text = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(n=Count(), s=Sum("R2.m"))
+        .plan(chain_db())
+        .explain()
+    )
+    assert "storage: whole-column" in mem_text
+    assert "R2: memory" in mem_text
+
+
+def test_verify_storage_csr_catches_corruption(tmp_path):
+    from repro.analysis.verify import verify_plan
+
+    plan = _plan_on_disk(tmp_path)
+    prep = plan.prep
+    rel = next(iter(prep.encoded))
+    attr = prep.encoded[rel].attrs[0]
+    view = prep.csr_view(rel, (attr,))
+    assert isinstance(view.keys, np.memmap)
+    assert verify_plan(plan) == []
+
+    # 1) descending keys
+    good_keys = view.keys
+    view.keys = np.asarray(good_keys)[::-1].copy()
+    codes = [d.code for d in verify_plan(plan)]
+    assert "V-STORE-CSR" in codes
+    view.keys = good_keys
+
+    # 2) order is not a permutation (a duplicated row index)
+    good_order = view.order
+    bad = np.asarray(good_order).copy()
+    if len(bad) >= 2:
+        bad[0] = bad[1]
+    view.order = bad
+    codes = [d.code for d in verify_plan(plan)]
+    assert "V-STORE-CSR" in codes
+    view.order = good_order
+
+    # 3) keys disagree with the raveled codes under the permutation
+    # (shift every key up by one — still ascending, but wrong values)
+    view.keys = np.minimum(np.asarray(good_keys) + 1, view.num_keys - 1)
+    codes = [d.code for d in verify_plan(plan)]
+    assert "V-STORE-CSR" in codes
+    view.keys = good_keys
+    assert verify_plan(plan) == []
+
+
+# ----------------------------------------------------------------------
+# chunked sketch feeding (satellite bugfix)
+# ----------------------------------------------------------------------
+
+
+def test_chunked_sketches_match_batch():
+    from repro.stats.collect import _relation_stats
+
+    db = chain_db()
+    rels = [db[r] for r in ("R1", "R2", "R3")]
+    dicts = build_dictionaries(rels, {"g1", "p0", "p1", "g2"})
+    er = encode_relation(db["R2"], ("p0", "p1"), dicts, None)
+    batch = _relation_stats(er, dicts, kmv_k=64, hh_m=8)
+    chunked = _relation_stats(er, dicts, kmv_k=64, hh_m=8, chunk_rows=17)
+    for attr in batch.cols:
+        b, c = batch.cols[attr], chunked.cols[attr]
+        # KMV truncated set-union is exactly associative: identical state
+        assert np.array_equal(b.distinct.state(), c.distinct.state())
+        # Misra–Gries state may differ under chunked decrements, but the
+        # stream length (the error-bound denominator) is preserved
+        assert b.heavy.n == c.heavy.n
+    assert batch.rows == chunked.rows
+
+
+def test_memmap_encoding_sketches_stream(tmp_path):
+    """A disk-backed prepare sketches without whole-column access (the
+    chunked default kicks in for memmap codes) and the estimates agree
+    with the in-memory collection."""
+    db = chain_db()
+    write_database(db, tmp_path / "db")
+    prep_mm = prepare(
+        JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2"))),
+        open_database(tmp_path / "db"),
+        chunk_rows=23,
+    )
+    prep_mem = prepare(
+        JoinAggQuery(("R1", "R2", "R3"), (("R1", "g1"), ("R3", "g2"))), db
+    )
+    for rel in prep_mem.encoded:
+        a = prep_mem.stats.relations[rel]
+        b = prep_mm.stats.relations[rel]
+        assert a.rows == b.rows and a.num_rows == b.num_rows
+        for attr in a.cols:
+            assert a.cols[attr].est_distinct == b.cols[attr].est_distinct
+
+
+# ----------------------------------------------------------------------
+# serving: one ingestion surface + write-through registration
+# ----------------------------------------------------------------------
+
+
+def test_server_register_deprecates_raw_mappings():
+    from repro.serve.server import JoinAggServer
+
+    with JoinAggServer(workers=1, fuse=False) as srv:
+        with pytest.warns(DeprecationWarning, match="eager"):
+            srv.register("R", {"a": [1, 2, 3]})
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            srv.register("S", Relation("S", {"a": np.arange(3)}))
+        assert sorted(srv.db.relations) == ["R", "S"]
+
+
+def test_server_write_through_registration(tmp_path):
+    from repro.serve.server import JoinAggServer
+    from repro.storage.store import StoredRelation
+
+    with JoinAggServer(workers=1, fuse=False, storage_dir=tmp_path) as srv:
+        srv.register("R", make_rel(40))
+        assert isinstance(srv.db["R"], StoredRelation)
+    # the directory stands alone: a fresh mount (or server) sees the data
+    db = open_database(tmp_path)
+    assert db["R"].num_rows == 40
+    with JoinAggServer(workers=1, fuse=False, storage_dir=tmp_path) as srv2:
+        assert srv2.db["R"].num_rows == 40
+
+
+def test_view_inserts_append_to_store(tmp_path):
+    from repro.serve.server import JoinAggServer
+
+    db = chain_db(80)
+    with JoinAggServer(workers=1, fuse=False, storage_dir=tmp_path) as srv:
+        for name in ("R1", "R2", "R3"):
+            from repro.relational.source import materialize_relation
+
+            srv.register(name, materialize_relation(db[name]))
+        q = Q.over("R1", "R2", "R3").group_by("R1.g1").agg(n=Count())
+        view = srv.create_view("v", q)
+        before = srv.db["R1"].num_rows
+        view.insert(
+            "R1", {"g1": np.array([0, 1]), "p0": np.array([2, 3])}
+        ).result()
+        assert srv.db["R1"].num_rows == before + 2
+    # persisted: remount shows the appended delta
+    assert open_database(tmp_path)["R1"].num_rows == before + 2
