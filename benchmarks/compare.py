@@ -220,6 +220,32 @@ def storage_delta_lines(fresh: dict[str, dict]) -> list[str]:
     return lines
 
 
+def fused_delta_lines(fresh: dict[str, dict]) -> list[str]:
+    """Table-15 fused-vs-three-dispatch summary as markdown rows."""
+    unf = fresh.get("table15,CHAIN,unfused")
+    fus = fresh.get("table15,CHAIN,fused")
+    if not (unf and fus):
+        return ["_no table-15 records in this run_"]
+    lines = [
+        "| metric | three-dispatch | fused megakernel |",
+        "|---|---:|---:|",
+        f"| kernel dispatches | {derived_field(unf, 'dispatches')} | "
+        f"{derived_field(fus, 'dispatches')} |",
+        f"| time (µs) | {unf['us_per_call']:.0f} | "
+        f"{fus['us_per_call']:.0f} |",
+    ]
+    ratio = derived_field(
+        fresh.get("table15,CHAIN,dispatch_reduction"), "ratio"
+    )
+    if ratio is not None:
+        lines.append(
+            f"\ndispatch reduction from hop fusion: **{ratio}** "
+            f"({derived_field(fresh.get('table15,CHAIN,dispatch_reduction'), 'aggs')}"
+            "-aggregate bundle, gated ≥1.3x)"
+        )
+    return lines
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -326,6 +352,10 @@ def main(argv: list[str] | None = None) -> int:
         "### Out-of-core storage tier (table 14)",
         "",
         *storage_delta_lines(fresh),
+        "",
+        "### Fused hop megakernel (table 15)",
+        "",
+        *fused_delta_lines(fresh),
         "",
     ]
     if failures:

@@ -44,9 +44,11 @@ def render(name: str, group: str, gen) -> str:
 
     n = SCALES[group]
     db, q = gen(n, seed=0)
-    plan = Q.from_query(q).engine(ENGINE).plan(db)
+    # fused(True) so the kernels: section (per-hop megakernel tiles,
+    # model-ranked — never the measurement cache) is golden-gated too
+    plan = Q.from_query(q).engine(ENGINE).fused(True).plan(db)
     plan.verify()  # every golden plan must be invariant-clean (DESIGN.md §11)
-    header = f"# plan golden: {name} ({group}, n={n}, engine={ENGINE})\n"
+    header = f"# plan golden: {name} ({group}, n={n}, engine={ENGINE}, fused)\n"
     return header + plan.explain(actuals=True) + "\n"
 
 

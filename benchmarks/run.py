@@ -15,6 +15,7 @@ from benchmarks import common, tables
 
 TABLES = [
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
+    "15",
 ]
 
 
@@ -66,6 +67,8 @@ def main() -> None:
         tables.table13_planner(n_real, verify)
     if run_all or args.table == "14":
         tables.table14_storage(n_chain, verify)
+    if run_all or args.table == "15":
+        tables.table15_fused(n_chain, verify)
     if run_all or args.table == "2":
         tables.table2_memory(n_branch)
 

@@ -43,6 +43,16 @@ Table XIV — out-of-core storage tier (DESIGN.md §12): in-memory vs
             the mmap prepare peak stays below 2× the largest single
             column while the in-memory path's is ~20× it.
 
+Table XV  — fused hop megakernel (DESIGN.md §13): one Pallas launch per
+            hop pass (gather + multi-channel product + segment scatter,
+            all in VMEM) vs the three-dispatch sparse path on the same
+            pinned-sparse plan.  Wall time on CPU runners is an
+            interpret-mode artifact, so the gated metric is the
+            kernel-dispatch count — the proxy for the launch overhead
+            and HBM round-trips fusion removes; verification asserts a
+            ≥1.3× dispatch reduction and bit-identical results on a
+            COUNT+SUM+MIN+MAX+AVG bundle.
+
 The 'PostgreSQL' column of the paper maps to the in-process traditional
 binary-join baseline; all engines are validated to agree on each run.
 """
@@ -584,6 +594,71 @@ def table14_storage(n: int, verify: bool) -> None:
             )
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
+
+
+def table15_fused(n: int, verify: bool) -> None:
+    """Table XV — fused hop megakernel vs three-dispatch (DESIGN.md §13).
+
+    Same plan both sides: sparse path pinned via a 1-byte memory budget,
+    a 5-aggregate bundle so the sum pass carries multiple channels and
+    the min/max passes run too.  Each side is warmed (build + trace +
+    jit memos), then one timed execute with the host-side dispatch
+    counters reset — the dispatch total is the launch-overhead/HBM
+    round-trip proxy the fusion exists to cut, and the only number
+    stable across runner hardware."""
+    import numpy as np
+
+    from repro.aggregates.semiring import Avg, Count, Max, Min, Sum
+    from repro.api import Q
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(47)
+    jdom, gdom = max(2, n // 20), max(2, n // 50)
+    db = _measured_chain_db(rng, n, jdom, gdom)
+    q = (
+        Q.over("R1", "R2", "R3")
+        .group_by("R1.g1", "R3.g2")
+        .agg(
+            c=Count(),
+            total=Sum("R2.m"),
+            lo=Min("R2.m"),
+            hi=Max("R2.m"),
+            mean=Avg("R2.m"),
+        )
+        .engine("jax")
+        .memory_budget(1)  # pin the sparse path: a pure fused-vs-not A/B
+    )
+    runs = {}
+    for tag, fused in (("unfused", False), ("fused", True)):
+        plan = q.fused(fused).plan(db)
+        plan.execute()  # warmup: program build + trace + compile memos
+        ops.reset_dispatch_counts()
+        res, t = timed(plan.execute)
+        counts = ops.dispatch_counts()
+        runs[tag] = (res, sum(counts.values()))
+        emit(
+            f"table15,CHAIN,{tag}", t,
+            f"groups={res.num_rows};dispatches={sum(counts.values())};"
+            + ";".join(f"n_{k}={v}" for k, v in sorted(counts.items())),
+        )
+    (res_u, d_u), (res_f, d_f) = runs["unfused"], runs["fused"]
+    ratio = d_u / max(d_f, 1)
+    emit(
+        "table15,CHAIN,dispatch_reduction", 0.0,
+        f"ratio={ratio:.2f}x;aggs=5",
+    )
+    if verify:
+        for name in res_u.agg_names:
+            if res_f.to_dict(name) != res_u.to_dict(name):
+                raise AssertionError(
+                    f"table15: fused result for {name!r} not bit-identical "
+                    "to the three-dispatch path"
+                )
+        if ratio < 1.3:
+            raise AssertionError(
+                f"table15: fused path cut dispatches only {ratio:.2f}x "
+                "below three-dispatch (expected >= 1.3x)"
+            )
 
 
 def table7_cyclic(n: int, verify: bool) -> None:

@@ -54,6 +54,17 @@ def _verify_catalog() -> int:
         print(f"catalog[TPCH@mesh=8]: {d}")
     if not diags:
         print("catalog[TPCH@mesh=8]: ok")
+
+    # a fused-megakernel variant: V-KERN binds on fused-capable engines,
+    # and the explicit option must survive compile + verify end to end
+    plan = Q.from_query(q).engine("jax").fused(True).plan(db)
+    diags = plan.verify(strict=False)
+    for d in diags:
+        failures += 1
+        print(f"catalog[TPCH@fused]: {d}")
+    if not diags:
+        kerns = len(plan.prep.decomposition.order)
+        print(f"catalog[TPCH@fused]: ok ({kerns} fused hop kernel(s))")
     return 1 if failures else 0
 
 

@@ -19,7 +19,12 @@ shipped (or is structurally exposed to):
   the trailing partial block unless the operand was padded to a
   multiple first.  Flagged unless the enclosing function also contains
   the ceil-div idiom ``-(-a // b)`` or a ``% b`` guard with the same
-  divisor (the ``pad = -n % b`` padding idiom).
+  divisor (the ``pad = -n % b`` padding idiom).  A *kernel scope* is any
+  jit region, any function containing a ``pallas_call``, or a function
+  carrying an explicit ``# tile-math`` marker on its ``def`` line — the
+  marker extends the rule to host-side tile arithmetic (the autotuner's
+  candidate generation and the fused-hop grid setup) where the same
+  uneven-division bug produces a config that silently drops lanes.
 * **lock discipline** (``lock-guard``) — shared attributes annotated
   ``# guarded-by: <lock>`` must only be touched inside a
   ``with self.<lock>:`` block (``__init__`` exempt; a method whose
@@ -39,6 +44,7 @@ from pathlib import Path
 
 _GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
 _JIT_MARK_RE = re.compile(r"#\s*jit-region\b")
+_TILE_MARK_RE = re.compile(r"#\s*tile-math\b")
 _OK_RE = re.compile(r"#\s*lint-ok:\s*([a-z-]+(?:\s*,\s*[a-z-]+)*)")
 
 # attribute reads that are static under tracing even on traced values
@@ -386,6 +392,13 @@ def _has_pallas_call(fn: ast.FunctionDef) -> bool:
     )
 
 
+def _tile_marked(fn: ast.FunctionDef, lines: list[str]) -> bool:
+    """Explicit ``# tile-math`` marker on the ``def`` line."""
+    return 1 <= fn.lineno <= len(lines) and bool(
+        _TILE_MARK_RE.search(lines[fn.lineno - 1])
+    )
+
+
 # ----------------------------------------------------------------------
 # rule: lock discipline (# guarded-by)
 # ----------------------------------------------------------------------
@@ -538,7 +551,7 @@ def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
         if (
             isinstance(node, ast.FunctionDef)
             and node not in region_fns
-            and _has_pallas_call(node)
+            and (_has_pallas_call(node) or _tile_marked(node, lines))
         ):
             findings += _check_tiling(node, path, lines)
     for node in ast.walk(tree):

@@ -33,6 +33,10 @@ V-SHARD-PARTITION  per-shard CSR key ranges exactly partition the
                    domain; edge slices are contiguous and exhaustive
 V-SHARD-TILE  padded tile covers every shard's real range width
 V-SENTINEL    pad sentinels sit outside every real key range
+V-KERN        fused-hop kernel configs: tile sizes are positive
+              multiples of the k-step granule, the segment space keeps
+              the pad sentinels non-aliasing (int32 headroom), and the
+              accumulator dtype is a float type the semirings support
 V-OVERFLOW    sketch-estimated counts fit the accumulator dtype
 V-GHD-COVER   every input relation is covered by its assigned bag
 V-GHD-RIP     bags holding each attribute form a connected subtree
@@ -633,6 +637,65 @@ def verify_distributed_program(prog) -> list[Diagnostic]:
 
 
 # ----------------------------------------------------------------------
+# fused-hop kernel configuration (DESIGN.md §13)
+# ----------------------------------------------------------------------
+
+
+def check_kernels(plan) -> list[Diagnostic]:
+    """V-KERN: every per-hop fused-megakernel config is executable.
+
+    Checks the deterministic (model-ranked) configs the fused path would
+    launch with: tile sizes must be positive multiples of the k-step
+    granule (``fused_hop`` splits tiles into granule-wide slices; a
+    non-divisible tile silently drops trailing slices — the
+    ``math.gcd`` regression), the hop's segment space must leave the
+    ``-1``/``knum`` pad sentinels non-aliasing under int32 keys, and the
+    accumulator dtype must be a float type every semiring variant
+    supports (``±inf`` identities have no integer encoding)."""
+    from repro.kernels import autotune
+    from repro.kernels.ops import _KSTEP_GRANULE
+
+    out: list[Diagnostic] = []
+    k = max(len(plan.channels), 1)
+    for entry in autotune.plan_kernel_configs(plan.prep, k=k):
+        cfg = entry["config"]
+        site = f"kernel/{entry['rel']}"
+        for name in ("block_e", "block_s", "block_r"):
+            v = getattr(cfg, name)
+            if v <= 0 or v % _KSTEP_GRANULE:
+                out.append(
+                    Diagnostic(
+                        "V-KERN",
+                        site,
+                        f"{name}={v} is not a positive multiple of the "
+                        f"k-step granule {_KSTEP_GRANULE} — the kernel's "
+                        "slice loop would drop trailing lanes",
+                    )
+                )
+        segs = entry["num_segments"]
+        if not 1 <= segs < _INT32_LIMIT:
+            out.append(
+                Diagnostic(
+                    "V-KERN",
+                    site,
+                    f"segment space {segs} outside [1, 2**31) — int32 "
+                    "keys overflow / the pad sentinel aliases a real "
+                    "segment",
+                )
+            )
+        if entry["acc_dtype"] not in ("float32", "float64"):
+            out.append(
+                Diagnostic(
+                    "V-KERN",
+                    site,
+                    f"accumulator dtype {entry['acc_dtype']!r} cannot "
+                    "carry the min/max ±inf identities",
+                )
+            )
+    return out
+
+
+# ----------------------------------------------------------------------
 # accumulator overflow at sketch-estimated cardinalities
 # ----------------------------------------------------------------------
 
@@ -776,6 +839,8 @@ def verify_plan(plan) -> list[Diagnostic]:
         from repro.core.distributed import mesh_shards
 
         out += check_shards(prep, mesh_shards(plan.mesh))
+    if getattr(plan.engine, "supports_fused", False):
+        out += check_kernels(plan)
     if plan.stats_enabled:
         out += check_overflow(prep, plan.engine.name)
     return out

@@ -86,6 +86,9 @@ class Q:
     stream_opt: tuple[str, int] | None = None
     mesh_opt: "object | None" = None  # jax Mesh or shard count
     stats_opt: bool = True  # statistics-driven planning (DESIGN.md §10)
+    # fused hop megakernels (DESIGN.md §13): True/False pins the choice,
+    # None defers to the REPRO_FUSED environment switch
+    fused_opt: bool | None = None
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -229,6 +232,15 @@ class Q:
         the root group attribute's CSR row ranges are partitioned
         one-per-device (DESIGN.md §8)."""
         return replace(self, mesh_opt=mesh)
+
+    def fused(self, enabled: bool = True) -> "Q":
+        """Run decomposition-tree hops as fused Pallas megakernels
+        (gather → product → segment scatter in one VMEM-resident kernel,
+        DESIGN.md §13).  ``True`` also pins the jax engine's sparse path
+        (fused hops have no dense form); ``False`` pins the
+        three-dispatch kernels even when ``REPRO_FUSED`` is set.  Only
+        fused-capable engines accept the option."""
+        return replace(self, fused_opt=bool(enabled))
 
     def stats(self, enabled: bool = True) -> "Q":
         """Toggle statistics-driven planning (DESIGN.md §10).  When off,

@@ -196,9 +196,17 @@ class JaxChannelEngine:
     name = "jax"
     supports_streaming = True
     supports_mesh = True
+    supports_fused = True
 
     def run(
-        self, prep, channels, minmax, stream=None, memory_budget=None, mesh=None
+        self,
+        prep,
+        channels,
+        minmax,
+        stream=None,
+        memory_budget=None,
+        mesh=None,
+        fused=None,
     ):
         from repro.core.jax_engine import (
             build_sparse_program,
@@ -208,17 +216,22 @@ class JaxChannelEngine:
 
         cm = tuple(ch.measure[0] if ch.kind == "sum" else None for ch in channels)
         if mesh is not None:
-            return self._run_distributed(prep, channels, minmax, cm, mesh)
+            return self._run_distributed(
+                prep, channels, minmax, cm, mesh, fused=fused
+            )
         choice = choose_jax_path(
             prep, k=len(channels), memory_budget=memory_budget, stream=stream,
             measured=cm,
         )
-        if choice.path == "dense":
+        # an explicit .fused(True) pins the sparse path: fused hops have
+        # no dense-einsum form (REPRO_FUSED alone does not move the
+        # dense/sparse choice — it only fuses hops when sparse runs)
+        if choice.path == "dense" and fused is not True:
             arr = execute_jax_channels(prep, cm)  # (k, *group_dims)
             arr = np.moveaxis(arr.astype(np.float64), 0, -1)
             mm = _shared_minmax(prep, prep.encoded, None, minmax)
             return [sparsify(prep, channels, arr, mm, None)]
-        prog = build_sparse_program(prep, cm)
+        prog = build_sparse_program(prep, cm, fused=fused)
         if stream is None:
             tiles = [(None, None, None)]
         else:
@@ -238,7 +251,7 @@ class JaxChannelEngine:
             )
         return outs
 
-    def _run_distributed(self, prep, channels, minmax, cm, mesh):
+    def _run_distributed(self, prep, channels, minmax, cm, mesh, fused=None):
         """Sharded sparse execution over the mesh's data axis: per-shard
         CSR partitions of the root group attribute under ``shard_map``,
         one :class:`EngineOutput` per shard (DESIGN.md §8).  MIN/MAX ride
@@ -247,7 +260,11 @@ class JaxChannelEngine:
         from repro.core.distributed import build_distributed_program
 
         prog = build_distributed_program(
-            prep, cm, mesh, minmax=tuple((r.kind, r.measure[0]) for r in minmax)
+            prep,
+            cm,
+            mesh,
+            minmax=tuple((r.kind, r.measure[0]) for r in minmax),
+            fused=fused,
         )
         outs = []
         for arr, mm_arrs, offsets in prog.run():

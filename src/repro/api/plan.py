@@ -146,6 +146,9 @@ class Plan:
     # False when the spec disabled statistics-driven planning (byte
     # heuristics only — the baseline side of the table-13 A/B)
     stats_enabled: bool = True
+    # fused hop megakernels (DESIGN.md §13): True/False pins the choice,
+    # None defers to the REPRO_FUSED environment switch at run time
+    fused: bool | None = None
     # effective streaming chunk size used at prepare time; None = the
     # whole-column in-RAM fast path (purely in-memory sources,
     # DESIGN.md §12)
@@ -239,6 +242,8 @@ class Plan:
         kwargs = {}
         if _accepts_memory_budget(self.engine):
             kwargs["memory_budget"] = self.memory_budget
+        if getattr(self.engine, "supports_fused", False):
+            kwargs["fused"] = self.fused
         if mesh is not None:
             if not getattr(self.engine, "supports_mesh", False):
                 raise UnsupportedPlanOption(
@@ -258,7 +263,13 @@ class Plan:
 
             return _assemble(
                 self,
-                execute_split(self.prep, self.split, self.engine, self.channels),
+                execute_split(
+                    self.prep,
+                    self.split,
+                    self.engine,
+                    self.channels,
+                    fused=self.fused,
+                ),
             )
         outputs = self.engine.run(
             self.prep,
@@ -383,6 +394,7 @@ class Plan:
                 lines.append("split: none (no qualifying skew)")
         if self.engine.name == "jax":
             lines.extend(self._explain_jax_path(stream))
+            lines.extend(self._explain_kernels())
         lines.append(
             f"aggregates ({len(self.channels)} semiring channel(s), "
             f"{len(self.minmax)} min/max request(s), one pass):"
@@ -454,10 +466,39 @@ class Plan:
             f"est dense peak {_fmt_bytes(choice.dense_peak)} "
             f"vs sparse peak {_fmt_bytes(choice.sparse_peak)}"
         ]
+        if choice.path == "dense" and self.fused is True:
+            lines.append(
+                "  pinned: sparse (.fused(True) — fused hop megakernels "
+                "have no dense-einsum form)"
+            )
         for rel in choice.dense_node_bytes:
             lines.append(
                 f"  {rel}: dense {_fmt_bytes(choice.dense_node_bytes[rel])} "
                 f"/ sparse {_fmt_bytes(choice.sparse_node_bytes[rel])}"
+            )
+        return lines
+
+    def _explain_kernels(self) -> list[str]:
+        """Per-hop fused-megakernel tile configs (jax engine, fused path
+        on).  Rendered from the deterministic model ranking
+        (:func:`repro.kernels.autotune.model_tiles_for` semantics) — the
+        on-disk measurement cache never leaks into explain output, so
+        plan goldens stay machine-independent."""
+        from repro.kernels import autotune, ops
+
+        if not ops.fused_enabled(self.fused):
+            return []
+        k = max(len(self.channels), 1)
+        lines = [
+            "kernels: fused hop megakernel (gather+product+scatter in "
+            "one pass; model-ranked tiles)"
+        ]
+        for entry in autotune.plan_kernel_configs(self.prep, k=k):
+            cfg = entry["config"]
+            lines.append(
+                f"  {entry['rel']}: tiles {cfg.key()}  "
+                f"segs={entry['num_segments']}  acc={entry['acc_dtype']}  "
+                f"est {entry['cost_seconds'] * 1e6:.2f}us"
             )
         return lines
 
@@ -599,6 +640,13 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
             f"engines do); drop the option or use a streaming-capable "
             f"engine ('tensor', 'jax')"
         )
+    fused_opt = getattr(spec, "fused_opt", None)
+    if fused_opt is not None and not getattr(engine, "supports_fused", False):
+        raise UnsupportedPlanOption(
+            f"engine {engine.name!r} has no fused hop megakernels (only "
+            "fused-capable engines do); drop .fused(...) or use the "
+            "'jax' engine"
+        )
 
     group_display = _display_names(spec.group_attrs)
     clash = set(group_display) & set(names)
@@ -677,6 +725,7 @@ def compile_plan(spec, db: Database, physical: bool = True) -> Plan:
         split=split,
         stats_enabled=stats_on,
         chunk_rows=chunk_rows,
+        fused=fused_opt,
     )
     if physical and _verify_on_compile():
         plan.verify()  # debug-mode assert (DESIGN.md §11)

@@ -46,6 +46,7 @@ except ImportError:  # pragma: no cover - depends on jax version
 from repro.core.jax_engine import EDGE_BUCKET, _INT32_LIMIT
 from repro.core.prepare import Prepared, _ravel, csr_restrict
 from repro.core.tensor_engine import channel_weight_matrices
+from repro.kernels import ops
 
 
 def mesh_axis(mesh: Mesh) -> str:
@@ -236,8 +237,12 @@ class DistributedSparseProgram:
     ``channel_measures`` mirrors :class:`~repro.core.jax_engine.
     SparseProgram`; ``minmax`` is a tuple of ``(kind, relation)`` pairs
     served by the same ``(min, +)`` / ``(max, +)`` semiring pass, sharing
-    the channel pass's gather indices.  Built once per (plan, mesh);
-    ``run()`` re-executes the jitted shard_map program.
+    the channel pass's gather indices.  When ``fused`` the device-local
+    hop bodies run as single :func:`repro.kernels.fused_hop` megakernel
+    calls (tile configs resolved host-side at build time, one sum + one
+    minmax config per hop) instead of the gather / product / scatter
+    trio.  Built once per (plan, mesh); ``run()`` re-executes the jitted
+    shard_map program.
     """
 
     prep: Prepared
@@ -250,6 +255,9 @@ class DistributedSparseProgram:
     tile: int  # uniform (padded) local domain of the shard attr
     hops: tuple[_Hop, ...]
     inputs: dict[str, np.ndarray]  # stacked (S, n_pad, ...) hop arrays
+    fused: bool = False
+    # per hop: (sum-pass TileConfig, minmax-pass TileConfig); () unfused
+    tile_cfgs: tuple = ()
     _jitted: Callable | None = field(default=None, repr=False)
     # device-resident copies of ``inputs``, placed once on first run()
     _dev_inputs: dict | None = field(default=None, repr=False)
@@ -269,11 +277,13 @@ class DistributedSparseProgram:
         idents = tuple(
             np.inf if kind == "min" else -np.inf for kind, _ in self.minmax
         )
+        fused = self.fused
+        cfgs = self.tile_cfgs if fused else ((None, None),) * len(hops)
 
         def fn(inputs):  # jit-region
             msgs: dict[str, jax.Array] = {}
             mm_msgs: list[dict[str, jax.Array]] = [{} for _ in range(n_mm)]
-            for hop in hops:
+            for hop, (cfg_c, cfg_m) in zip(hops, cfgs):
                 keys = inputs[f"k:{hop.rel}"][0]
                 gathers = [
                     inputs[f"i:{hop.rel}:{c}"][0] for c in hop.children
@@ -281,20 +291,42 @@ class DistributedSparseProgram:
                 n = keys.shape[0]
                 # distributive channels: row-aligned product, scatter-add
                 w = inputs[f"wc:{hop.rel}"][0]  # (n, k)
-                vals = w[:, None, :]
-                for c, (shp, gp), idx in zip(
-                    hop.children, hop.child_shapes, gathers
-                ):
-                    rows = msgs[c].reshape(shp, gp, k)[idx]  # (n, gp, k)
-                    vals = (vals[:, :, None, :] * rows[:, None, :, :]).reshape(
-                        n, -1, k
+                if fused:
+                    # one megakernel per hop; padded keys carry the
+                    # hop.knum sentinel, which either exceeds the padded
+                    # segment grid or lands in rows fused_hop trims
+                    seg = ops.fused_hop(
+                        keys,
+                        w,
+                        tuple(
+                            msgs[c].reshape(shp, gp * k)
+                            for c, (shp, gp) in zip(
+                                hop.children, hop.child_shapes
+                            )
+                        ),
+                        tuple(gathers),
+                        num_segments=hop.knum,
+                        k=k,
+                        kind="sum",
+                        block_e=cfg_c.block_e,
+                        block_s=cfg_c.block_s,
+                        block_r=cfg_c.block_r,
                     )
-                flat = vals.reshape(n, hop.width * k)
-                seg = (
-                    jnp.zeros((hop.knum, hop.width * k), jnp.float32)
-                    .at[keys]
-                    .add(flat)
-                )
+                else:
+                    vals = w[:, None, :]
+                    for c, (shp, gp), idx in zip(
+                        hop.children, hop.child_shapes, gathers
+                    ):
+                        rows = msgs[c].reshape(shp, gp, k)[idx]  # (n, gp, k)
+                        vals = (
+                            vals[:, :, None, :] * rows[:, None, :, :]
+                        ).reshape(n, -1, k)
+                    flat = vals.reshape(n, hop.width * k)
+                    seg = (
+                        jnp.zeros((hop.knum, hop.width * k), jnp.float32)
+                        .at[keys]
+                        .add(flat)
+                    )
                 arr = seg.reshape(hop.kept_dims + hop.gdims_all + (k,))
                 perm = hop.perm + (len(hop.perm),)  # channel axis stays last
                 msgs[hop.rel] = jnp.transpose(arr, perm)
@@ -303,22 +335,41 @@ class DistributedSparseProgram:
                     zip(self.minmax, idents)
                 ):
                     wm = inputs[f"wm{j}:{hop.rel}"][0]  # (n,)
-                    cand = wm[:, None]
-                    for c, (shp, gp), idx in zip(
-                        hop.children, hop.child_shapes, gathers
-                    ):
-                        rows = mm_msgs[j][c].reshape(shp, gp)[idx]
-                        cand = (cand[:, :, None] + rows[:, None, :]).reshape(
-                            n, -1
+                    if fused:
+                        red = ops.fused_hop(
+                            keys,
+                            wm[:, None],
+                            tuple(
+                                mm_msgs[j][c].reshape(shp, gp)
+                                for c, (shp, gp) in zip(
+                                    hop.children, hop.child_shapes
+                                )
+                            ),
+                            tuple(gathers),
+                            num_segments=hop.knum,
+                            k=1,
+                            kind=kind,
+                            block_e=cfg_m.block_e,
+                            block_s=cfg_m.block_s,
+                            block_r=cfg_m.block_r,
                         )
-                    base = jnp.full(
-                        (hop.knum, hop.width), ident, jnp.float32
-                    )
-                    red = (
-                        base.at[keys].min(cand)
-                        if kind == "min"
-                        else base.at[keys].max(cand)
-                    )
+                    else:
+                        cand = wm[:, None]
+                        for c, (shp, gp), idx in zip(
+                            hop.children, hop.child_shapes, gathers
+                        ):
+                            rows = mm_msgs[j][c].reshape(shp, gp)[idx]
+                            cand = (
+                                cand[:, :, None] + rows[:, None, :]
+                            ).reshape(n, -1)
+                        base = jnp.full(
+                            (hop.knum, hop.width), ident, jnp.float32
+                        )
+                        red = (
+                            base.at[keys].min(cand)
+                            if kind == "min"
+                            else base.at[keys].max(cand)
+                        )
                     mm_msgs[j][hop.rel] = jnp.transpose(
                         red.reshape(hop.kept_dims + hop.gdims_all), hop.perm
                     )
@@ -369,6 +420,15 @@ class DistributedSparseProgram:
             self._dev_inputs = {
                 n: jax.device_put(a, sh) for n, a in self.inputs.items()
             }
+        n_passes = 1 + len(self.minmax)
+        if self.fused:
+            ops.record_dispatch("fused", len(self.hops) * n_passes)
+        else:
+            for hop in self.hops:
+                nc = len(hop.children)
+                ops.record_dispatch("gather", nc * n_passes)
+                ops.record_dispatch("product", nc * n_passes)
+                ops.record_dispatch("scatter", n_passes)
         outs = self.jit()(self._dev_inputs)
         chan = np.asarray(outs[0])  # (S, tile, ..., k)
         mms = [np.asarray(o) for o in outs[1:]]
@@ -414,19 +474,27 @@ def build_distributed_program(
     channel_measures: tuple[str | None, ...] = (None,),
     mesh: Mesh | int = 1,
     minmax: tuple[tuple[str, str], ...] = (),
+    fused: bool | None = None,
 ) -> DistributedSparseProgram:
     """Partition ``prep`` over the mesh's data axis and bind the sharded
     hop schedule + per-shard CSR slices into a runnable program.
 
-    Memoized on the ``Prepared`` per (channels, minmax, mesh): repeated
-    ``Plan.execute(mesh=...)`` calls reuse one built program and one
-    shard_map compile instead of re-slicing and re-tracing every call.
-    The memo is the bounded :class:`~repro.serve.cache.LRUCache` on
-    ``Prepared._program_cache`` (hit/miss/eviction counters included), so
-    a server-cached plan cannot pin unboundedly many shard programs."""
+    ``fused=None`` defers to the ``REPRO_FUSED`` environment switch
+    (:func:`repro.kernels.ops.fused_enabled`); the resolved flag joins
+    the memo key, so fused and three-dispatch programs coexist.
+
+    Memoized on the ``Prepared`` per (channels, minmax, mesh, fused):
+    repeated ``Plan.execute(mesh=...)`` calls reuse one built program and
+    one shard_map compile instead of re-slicing and re-tracing every
+    call.  The memo is the bounded :class:`~repro.serve.cache.LRUCache`
+    on ``Prepared._program_cache`` (hit/miss/eviction counters included),
+    so a server-cached plan cannot pin unboundedly many shard programs."""
     mesh = resolve_mesh(mesh)
+    fused = ops.fused_enabled(fused)
     cache = prep._program_cache
-    key = ("distributed", tuple(channel_measures), tuple(minmax), mesh)
+    key = (
+        "distributed", tuple(channel_measures), tuple(minmax), mesh, fused
+    )
     cached = cache.get(key)
     if cached is not None:
         return cached
@@ -472,6 +540,44 @@ def build_distributed_program(
 
     sentinels = {f"k:{h.rel}": h.knum for h in hops}
     inputs = _pad_stack(per_shard, sentinels)
+
+    tile_cfgs: tuple = ()
+    if fused:
+        # resolve megakernel tiles host-side, once per build: the traced
+        # fn must close over static block sizes
+        from repro.kernels import autotune
+
+        k = len(channel_measures)
+        cfg_list = []
+        for hop in hops:
+            edges = inputs[f"k:{hop.rel}"].shape[1]
+            rows = tuple(shp for shp, _ in hop.child_shapes)
+            widths = tuple(gp for _, gp in hop.child_shapes)
+            cfg_c = autotune.tiles_for(
+                autotune.hop_shape(
+                    edges=edges,
+                    child_rows=rows,
+                    k=k,
+                    kind="sum",
+                    child_widths=widths,
+                    num_segments=hop.knum,
+                )
+            )
+            cfg_m = cfg_c
+            if minmax:
+                cfg_m = autotune.tiles_for(
+                    autotune.hop_shape(
+                        edges=edges,
+                        child_rows=rows,
+                        k=1,
+                        kind=minmax[0][0],
+                        child_widths=widths,
+                        num_segments=hop.knum,
+                    )
+                )
+            cfg_list.append((cfg_c, cfg_m))
+        tile_cfgs = tuple(cfg_list)
+
     return cache.setdefault(key, DistributedSparseProgram(
         prep=prep,
         channel_measures=tuple(channel_measures),
@@ -483,6 +589,8 @@ def build_distributed_program(
         tile=tile,
         hops=hops,
         inputs=inputs,
+        fused=fused,
+        tile_cfgs=tile_cfgs,
     ))
 
 

@@ -359,8 +359,15 @@ def _use_ref_kernels(interpret: bool | None) -> bool:
     kernel body per grid cell in Python — a validation device, orders of
     magnitude too slow to benchmark — while the XLA segment ops are the
     fastest CPU lowering of the same contraction.  On TPU backends (or
-    with an explicit ``interpret`` flag) the Pallas kernels run."""
-    return interpret is None and jax.default_backend() == "cpu"
+    with an explicit ``interpret`` flag) the Pallas kernels run.
+
+    Delegates to :func:`repro.kernels.ops.use_ref_kernels` so the engine
+    and the kernel wrappers share one policy: an explicit flag pins the
+    Pallas path in both places, so one program can never mix ref and
+    Pallas-interpret hops."""
+    from repro.kernels import ops
+
+    return ops.use_ref_kernels(interpret)
 
 
 # the ref spmm's per-edge gather materializes (edges × width); chunk the
@@ -394,6 +401,8 @@ class _CsrHopMixin:
     one row-key axis and one column-index axis."""
 
     interpret: bool | None = None
+    # fused-hop switch (None = follow the REPRO_FUSED environment)
+    fused: bool | None = None
     # tile-local CSR views, shared across the engines of one stream tile
     # (channel pass + one per MinMaxRequest) so each relation sorts once
     view_cache: dict | None = None
@@ -430,6 +439,50 @@ class _CsrHopMixin:
             child_msgs,
         )
 
+    def _fused_contract(self, w32, gathers, keys, knum, kind, k=1):
+        """Run one hop as a single fused Pallas dispatch (DESIGN.md §13):
+        gather + channel product + segment scatter in one kernel, the
+        edge-sized intermediate staying in VMEM.  ``gathers`` holds
+        ``(message, idx)`` pairs; sum messages are ``(rows, width_c, k)``
+        and min/max messages ``(rows, width_c)`` — both flatten row-major
+        to the kernel's width-major/k-minor layout."""
+        from repro.kernels import autotune, ops
+
+        msgs, idxs, child_rows, child_widths = [], [], [], []
+        for m2, idx in gathers:
+            flat = np.ascontiguousarray(m2, np.float32).reshape(
+                m2.shape[0], -1
+            )
+            msgs.append(jnp.asarray(flat))
+            idxs.append(jnp.asarray(idx, jnp.int32))
+            child_rows.append(m2.shape[0])
+            child_widths.append(m2.shape[1])
+        cfg = autotune.tiles_for(
+            autotune.hop_shape(
+                edges=len(keys),
+                child_rows=tuple(child_rows),
+                k=k,
+                kind=kind,
+                child_widths=tuple(child_widths),
+                num_segments=knum,
+            )
+        )
+        ops.record_dispatch("fused")
+        out = ops.fused_hop(
+            jnp.asarray(keys, jnp.int32),
+            jnp.asarray(w32),
+            tuple(msgs),
+            tuple(idxs),
+            num_segments=knum,
+            k=k,
+            kind=kind,
+            block_e=cfg.block_e,
+            block_s=cfg.block_s,
+            block_r=cfg.block_r,
+            interpret=self.interpret,
+        )
+        return np.asarray(out, np.float32)
+
 
 class _KernelChannelEngine(_CsrHopMixin, ChannelTensorEngine):
     """k-channel contraction whose gather-product-scatter hot loop runs
@@ -443,20 +496,34 @@ class _KernelChannelEngine(_CsrHopMixin, ChannelTensorEngine):
       host-side and reduced with ``segment_sum``.
     """
 
-    def __init__(self, *args, interpret: bool | None = None, **kwargs):
+    def __init__(
+        self, *args, interpret: bool | None = None,
+        fused: bool | None = None, **kwargs,
+    ):
         super().__init__(*args, **kwargs)
         self.interpret = interpret
+        self.fused = fused
 
     def _contract_block(self, weights, gathers, keys, knum):
-        from repro.kernels import ref
+        from repro.kernels import ops, ref
         from repro.kernels.ops import coo_spmm, segment_sum
 
         n = len(weights)
         if n == 0 or knum >= _INT32_LIMIT:
             out = super()._contract_block(weights, gathers, keys, knum)
             return out.astype(np.float32)
-        use_ref = _use_ref_kernels(self.interpret)
         w32 = np.asarray(weights, dtype=np.float32)  # (n, k)
+        if ops.fused_enabled(self.fused) and all(
+            m2.shape[0] < _INT32_LIMIT for m2, _ in gathers
+        ):
+            width = 1
+            for m2, _ in gathers:
+                width *= m2.shape[1]
+            out = self._fused_contract(
+                w32, gathers, keys, knum, "sum", k=self.k
+            )
+            return out.reshape(knum, width, self.k)
+        use_ref = _use_ref_kernels(self.interpret)
         uniform = self.k == 1 or bool((w32 == w32[:, :1]).all())
         if len(gathers) == 1 and uniform:
             m2, idx = gathers[0]  # m2 (rows, width, k)
@@ -465,6 +532,7 @@ class _KernelChannelEngine(_CsrHopMixin, ChannelTensorEngine):
                 flat = np.ascontiguousarray(m2, dtype=np.float32).reshape(
                     rows, width * self.k
                 )
+                ops.record_dispatch("spmm")
                 if use_ref:
                     out = _ref_spmm_chunked(keys, idx, w32[:, 0], flat, knum)
                 else:
@@ -490,11 +558,14 @@ class _KernelChannelEngine(_CsrHopMixin, ChannelTensorEngine):
             sl = slice(lo, lo + chunk)
             vals = w32[sl].reshape(-1, 1, self.k)
             for m2, idx in g32:
+                ops.record_dispatch("gather")
                 rows = m2[idx[sl]]  # (c, Wc, k)
+                ops.record_dispatch("product")
                 vals = (vals[:, :, None, :] * rows[:, None, :, :]).reshape(
                     vals.shape[0], -1, self.k
                 )
             flat = vals.reshape(vals.shape[0], width * self.k)
+            ops.record_dispatch("scatter")
             if use_ref:
                 part = ref.segment_sum_ref(
                     jnp.asarray(flat), jnp.asarray(keys[sl], jnp.int32), knum
@@ -520,12 +591,14 @@ class _MinMaxKernelEngine(_CsrHopMixin, TensorEngine):
 
     def __init__(
         self, prep, kind: str, rel_m: str, *,
-        interpret: bool | None = None, domains=None, encoded=None,
+        interpret: bool | None = None, fused: bool | None = None,
+        domains=None, encoded=None,
     ):
         super().__init__(prep, domains=domains, encoded=encoded)
         self.kind = kind
         self.rel_m = rel_m
         self.interpret = interpret
+        self.fused = fused
         self.ident = np.inf if kind == "min" else -np.inf
 
     def _weights(self, rel):
@@ -535,7 +608,7 @@ class _MinMaxKernelEngine(_CsrHopMixin, TensorEngine):
         return np.zeros(er.num_rows)
 
     def _contract_block(self, weights, gathers, keys, knum):
-        from repro.kernels import ref
+        from repro.kernels import ops, ref
         from repro.kernels.ops import segment_reduce
 
         n = len(weights)
@@ -549,6 +622,12 @@ class _MinMaxKernelEngine(_CsrHopMixin, TensorEngine):
         if n == 0:
             return out
         w32 = np.asarray(weights, np.float32)
+        if (
+            ops.fused_enabled(self.fused)
+            and knum < _INT32_LIMIT
+            and all(m2.shape[0] < _INT32_LIMIT for m2, _ in g32)
+        ):
+            return self._fused_contract(w32, g32, keys, knum, self.kind)
         use_ref = _use_ref_kernels(self.interpret)
         # edge axis chunked like the channel engine's general hop: the
         # per-edge candidate temp stays bounded by _REF_GATHER_BYTES
@@ -557,10 +636,13 @@ class _MinMaxKernelEngine(_CsrHopMixin, TensorEngine):
             sl = slice(lo, lo + chunk)
             vals = w32[sl].reshape(-1, 1)
             for m2, idx in g32:
+                ops.record_dispatch("gather")
                 rows = m2[idx[sl]]  # (c, Wc)
+                ops.record_dispatch("product")
                 vals = (vals[:, :, None] + rows[:, None, :]).reshape(
                     vals.shape[0], -1
                 )
+            ops.record_dispatch("scatter")
             if knum >= _INT32_LIMIT:
                 red.at(out, keys[sl], vals)
                 continue
@@ -602,6 +684,8 @@ class SparseProgram:
     prep: Prepared
     channel_measures: tuple[str | None, ...]
     interpret: bool | None = None
+    # fused megakernel hops (None = follow REPRO_FUSED; DESIGN.md §13)
+    fused: bool | None = None
 
     @property
     def k(self) -> int:
@@ -619,6 +703,7 @@ class SparseProgram:
             domains=domains,
             encoded=encoded,
             interpret=self.interpret,
+            fused=self.fused,
         )
         eng.view_cache = view_cache
         return eng.run()
@@ -633,6 +718,7 @@ class SparseProgram:
         eng = _MinMaxKernelEngine(
             self.prep, kind, rel_m,
             domains=domains, encoded=encoded, interpret=self.interpret,
+            fused=self.fused,
         )
         eng.view_cache = view_cache
         arr = eng.run()
@@ -655,9 +741,10 @@ def build_sparse_program(
     prep: Prepared,
     channel_measures: tuple[str | None, ...],
     interpret: bool | None = None,
+    fused: bool | None = None,
 ) -> SparseProgram:
     """Bind ``Prepared`` + channel spec into a :class:`SparseProgram`."""
-    return SparseProgram(prep, tuple(channel_measures), interpret)
+    return SparseProgram(prep, tuple(channel_measures), interpret, fused)
 
 
 # ----------------------------------------------------------------------

@@ -21,6 +21,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: grid-axis semantics: the m axis writes disjoint output tiles
+#: (parallelizable), but the e and k axes revisit one output tile with
+#: a ``@pl.when`` init + accumulate — they MUST run sequentially, which
+#: only TPU's default grid order guarantees.  Declaring them
+#: ``arbitrary`` makes that requirement explicit so a GPU lowering
+#: cannot race the init against another revisit.
+DIM_SEMANTICS = ("parallel", "arbitrary", "arbitrary")
 
 
 def _coo_spmm_kernel(
@@ -67,8 +76,12 @@ def coo_spmm(
     interpret: bool | None = None,
 ) -> jax.Array:
     """out (num_rows, n) with out[rows[i]] += vals[i] * dense[cols[i]]."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import ops
+
+    interpret = ops.resolve_interpret(interpret)
+    block_m = ops.normalize_block("block_m", block_m)
+    block_e = ops.normalize_block("block_e", block_e)
+    block_k = ops.normalize_block("block_k", block_k)
     nnz = rows.shape[0]
     k, n = dense.shape
     e_pad = -nnz % block_e
@@ -93,6 +106,7 @@ def coo_spmm(
         ],
         out_specs=pl.BlockSpec((block_m, n), lambda mi, ei, ki: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((m_total, n), dense.dtype),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
     )(rows.astype(jnp.int32), cols.astype(jnp.int32), vals.astype(dense.dtype), dense)
     return out[:num_rows]

@@ -1,0 +1,296 @@
+"""Pallas TPU fused JOIN-AGG hop megakernel (DESIGN.md §13).
+
+One decomposition-tree hop is gather → row-aligned channel product →
+segment scatter.  The three-dispatch path runs those as separate
+kernels, round-tripping the edge-sized ``(edges, width·k)`` product
+through HBM twice.  This kernel fuses the whole hop: each grid cell
+gathers the child message rows for one edge tile (one-hot matmuls,
+``block_r`` row tiles at a time), forms the per-edge channel-diagonal
+product in registers/VMEM, and reduces it straight into the resident
+``(block_s, width·k)`` output tile — the edge-sized intermediate never
+leaves VMEM.
+
+Two variants share the wrapper:
+
+* ``kind="sum"`` — (+, ×): weights multiply, child rows multiply
+  channel-diagonally, the scatter is a one-hot MXU matmul.
+* ``kind="min"``/``"max"`` — (min, +)/(max, +): weights and child rows
+  add, the scatter is the ±inf-selector k-slice reduction from
+  ``segment_reduce``.  Child messages carry ±inf identities for
+  unreached rows; a gather matmul would turn those into ``0·inf = nan``,
+  so the gather tracks a parallel finiteness mask and re-injects the
+  identity after the product (bit-identical to the true-gather path).
+
+Grid ``(s_tiles, e_tiles)``; the output tile is revisited across the
+edge axis and accumulated/reduced in VMEM.  Edges need no ordering —
+padding uses key ``-1`` (matches no segment) and index ``0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IDENT = {"min": jnp.inf, "max": -jnp.inf}
+#: magnitudes at or above this are the ±inf identity in child messages
+_FINITE_MAX = 3.0e38
+
+#: the segment axis writes disjoint output tiles (parallelizable); the
+#: edge axis revisits one output tile with a ``@pl.when(ei == 0)`` init
+#: + accumulate/reduce, so it must be sequential ("arbitrary")
+DIM_SEMANTICS = ("parallel", "arbitrary")
+
+
+def _gather_sum(idx, msg, block_r, dtype):
+    """One-hot gather ``msg[idx]`` as ``block_r``-tiled MXU matmuls."""
+    block_e = idx.shape[0]
+    width_ck = msg.shape[1]
+
+    def body(ri, acc):
+        r0 = ri * block_r
+        iota_r = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_r), 1)
+        sel = (idx[:, None] - r0 == iota_r).astype(dtype)
+        chunk = jax.lax.dynamic_slice_in_dim(msg, r0, block_r, axis=0)
+        return acc + jnp.dot(sel, chunk, preferred_element_type=dtype)
+
+    # exact: the wrapper pads child rows to a block_r multiple
+    steps = msg.shape[0] // block_r  # lint-ok: tile-floordiv
+    return jax.lax.fori_loop(
+        0, steps, body, jnp.zeros((block_e, width_ck), dtype)
+    )
+
+
+def _gather_minmax(idx, msg, block_r, dtype):
+    """Like :func:`_gather_sum`, but ±inf identity entries gather as 0
+    with a parallel 0/1 finiteness mask (a one-hot matmul against ±inf
+    would produce nan)."""
+    block_e = idx.shape[0]
+    width_ck = msg.shape[1]
+
+    def body(ri, carry):
+        acc, fin = carry
+        r0 = ri * block_r
+        iota_r = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_r), 1)
+        sel = (idx[:, None] - r0 == iota_r).astype(dtype)
+        chunk = jax.lax.dynamic_slice_in_dim(msg, r0, block_r, axis=0)
+        finite = (chunk > -_FINITE_MAX) & (chunk < _FINITE_MAX)
+        vals = jnp.where(finite, chunk, 0.0).astype(dtype)
+        return (
+            acc + jnp.dot(sel, vals, preferred_element_type=dtype),
+            fin + jnp.dot(sel, finite.astype(dtype), preferred_element_type=dtype),
+        )
+
+    # exact: the wrapper pads child rows to a block_r multiple
+    steps = msg.shape[0] // block_r  # lint-ok: tile-floordiv
+    zero = jnp.zeros((block_e, width_ck), dtype)
+    return jax.lax.fori_loop(0, steps, body, (zero, zero))
+
+
+def _fused_hop_kernel(
+    *refs,
+    widths: tuple[int, ...],
+    k: int,
+    block_s: int,
+    block_r: int,
+    kind: str,
+    k_step: int,
+):
+    nchild = len(widths)
+    keys_ref, w_ref = refs[0], refs[1]
+    idx_refs = refs[2 : 2 + nchild]
+    msg_refs = refs[2 + nchild : 2 + 2 * nchild]
+    out_ref = refs[2 + 2 * nchild]
+    si = pl.program_id(0)
+    ei = pl.program_id(1)
+    dtype = out_ref.dtype
+
+    @pl.when(ei == 0)
+    def _init():
+        if kind == "sum":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, _IDENT[kind])
+
+    keys = keys_ref[...]  # (block_e,) int32 (global segment ids)
+    block_e = keys.shape[0]
+    seg0 = si * block_s
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (block_s, block_e), 0)
+
+    if kind == "sum":
+        acc = w_ref[...][:, None, :]  # (block_e, 1, k)
+        for idx_ref, msg_ref, wc in zip(idx_refs, msg_refs, widths):
+            g = _gather_sum(idx_ref[...], msg_ref[...], block_r, dtype)
+            gr = g.reshape(block_e, wc, k)
+            # channel-diagonal product, width-major/k-minor like the
+            # three-dispatch engine's host-side product
+            acc = (acc[:, :, None, :] * gr[:, None, :, :]).reshape(
+                block_e, -1, k
+            )
+        flat = acc.reshape(block_e, -1)  # (block_e, width·k)
+        onehot = (keys[None, :] - seg0 == iota_s).astype(dtype)
+        out_ref[...] += jnp.dot(onehot, flat, preferred_element_type=dtype)
+        return
+
+    # min/max: additive product with finiteness tracking
+    ident = _IDENT[kind]
+    acc = w_ref[...]  # (block_e, 1)
+    ok = jnp.ones_like(acc)
+    for idx_ref, msg_ref, _wc in zip(idx_refs, msg_refs, widths):
+        g, fin = _gather_minmax(idx_ref[...], msg_ref[...], block_r, dtype)
+        acc = (acc[:, :, None] + g[:, None, :]).reshape(block_e, -1)
+        ok = (ok[:, :, None] * fin[:, None, :]).reshape(block_e, -1)
+    cand = jnp.where(ok > 0.5, acc, ident)  # (block_e, width)
+    sel = keys[None, :] - seg0 == iota_s
+    a = jnp.where(sel, 0.0, ident).astype(dtype)
+    red = jnp.minimum if kind == "min" else jnp.maximum
+
+    def body(i, accum):
+        lo = i * k_step
+        a_sl = jax.lax.dynamic_slice_in_dim(a, lo, k_step, axis=1)
+        d_sl = jax.lax.dynamic_slice_in_dim(cand, lo, k_step, axis=0)
+        c = a_sl[:, :, None] + d_sl[None, :, :]
+        upd = jnp.min(c, axis=1) if kind == "min" else jnp.max(c, axis=1)
+        return red(accum, upd)
+
+    # exact: block_e is a normalized block, so k_step divides it
+    steps = block_e // k_step  # lint-ok: tile-floordiv
+    out_ref[...] = jax.lax.fori_loop(0, steps, body, out_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_segments",
+        "k",
+        "kind",
+        "block_e",
+        "block_s",
+        "block_r",
+        "interpret",
+    ),
+)
+def fused_hop(
+    keys: jax.Array,
+    weights: jax.Array,
+    child_msgs: tuple[jax.Array, ...],
+    child_idx: tuple[jax.Array, ...],
+    num_segments: int,
+    k: int = 1,
+    kind: str = "sum",
+    block_e: int = 512,
+    block_s: int = 128,
+    block_r: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused JOIN-AGG hop.
+
+    ``keys`` (n,) raveled output segment per edge; ``weights`` (n, k)
+    per-edge channel weights (k=1 additive payload for min/max);
+    ``child_msgs[c]`` (rows_c, width_c·k) the c-th child's flattened
+    message (width-major, k-minor); ``child_idx[c]`` (n,) the edge→row
+    gather index into it.  Returns ``(num_segments, width·k)`` f32 with
+    ``width = Π width_c`` — empty segments hold 0 (sum) or ±inf
+    (min/max), exactly like the three-dispatch path before masking.
+    """
+    from repro.kernels import ops
+
+    interpret = ops.resolve_interpret(interpret)
+    block_e = ops.normalize_block("block_e", block_e)
+    block_s = ops.normalize_block("block_s", block_s)
+    block_r = ops.normalize_block("block_r", block_r)
+    if kind not in ("sum", "min", "max"):
+        raise ValueError(f"unknown hop kind {kind!r}")
+    if num_segments < 1:
+        raise ValueError(f"num_segments must be >= 1, got {num_segments}")
+    if kind != "sum" and k != 1:
+        raise ValueError("min/max hops are single-channel (k=1)")
+    if len(child_msgs) != len(child_idx):
+        raise ValueError("child_msgs and child_idx must pair up")
+    n = keys.shape[0]
+    f32 = jnp.float32
+
+    weights = jnp.asarray(weights, f32).reshape(n, k) if n else jnp.zeros(
+        (0, k), f32
+    )
+    widths = []
+    for msg in child_msgs:
+        width_ck = msg.shape[1]
+        if width_ck % k != 0:
+            raise ValueError(
+                f"child message width {width_ck} is not a multiple of k={k}"
+            )
+        widths.append(width_ck // k)
+    width = 1
+    for wc in widths:
+        width *= wc
+
+    # pad edges to the block grid; at least one edge tile must exist or
+    # the ``@pl.when(ei == 0)`` init never runs and the output tile is
+    # uninitialized garbage
+    e_pad = -n % block_e
+    e_total = n + e_pad
+    if e_total == 0:
+        e_total = block_e
+    pad_to = e_total - n
+    keys = jnp.pad(keys.astype(jnp.int32), (0, pad_to), constant_values=-1)
+    weights = jnp.pad(weights, ((0, pad_to), (0, 0)))
+    idxs = tuple(
+        jnp.pad(ix.astype(jnp.int32), (0, pad_to)) for ix in child_idx
+    )
+
+    # pad child rows to the gather tile; index 0 padding rows are never
+    # referenced (real indices stay in range, padded edges never land)
+    msgs = []
+    for msg in child_msgs:
+        msg = jnp.asarray(msg, f32)
+        r_pad = -msg.shape[0] % block_r
+        rows_total = msg.shape[0] + r_pad
+        if rows_total == 0:
+            rows_total = block_r
+        fill = 0.0 if kind == "sum" else float(_IDENT[kind])
+        msgs.append(
+            jnp.pad(
+                msg,
+                ((0, rows_total - msg.shape[0]), (0, 0)),
+                constant_values=fill,
+            )
+        )
+
+    s_pad = -num_segments % block_s
+    s_total = num_segments + s_pad
+    grid = (s_total // block_s, e_total // block_e)
+    out_width = max(width * k, 1)
+
+    e_spec = pl.BlockSpec((block_e,), lambda si, ei: (ei,))
+    in_specs = [
+        e_spec,
+        pl.BlockSpec((block_e, k), lambda si, ei: (ei, 0)),
+        *[e_spec for _ in idxs],
+        # whole child messages are resident per grid cell; the autotuner
+        # keeps candidate tiles within the VMEM budget
+        *[
+            pl.BlockSpec(m.shape, lambda si, ei: (0, 0))
+            for m in msgs
+        ],
+    ]
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_hop_kernel,
+            widths=tuple(widths),
+            k=k,
+            block_s=block_s,
+            block_r=block_r,
+            kind=kind,
+            k_step=ops.k_step_for(block_e),
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_s, out_width), lambda si, ei: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_total, out_width), f32),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=DIM_SEMANTICS),
+        interpret=interpret,
+    )(keys, weights, *idxs, *msgs)
+    return out[:num_segments]

@@ -1,11 +1,170 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Kernel-layer policy + re-exports (DESIGN.md §13).
 
-``interpret`` defaults to True on CPU hosts (kernel bodies execute in
-Python for validation) and False on real TPU backends.
+This module is the single home for the cross-kernel decisions that used
+to be duplicated (and could disagree) per kernel file:
+
+* **interpret resolution** — ``resolve_interpret`` maps the
+  ``interpret=None`` auto mode to "interpret on CPU hosts" exactly once,
+  and pins an *explicit* flag to the Pallas path: ``interpret=False`` on
+  a CPU host still runs Pallas (in interpret mode, since CPU has no
+  Mosaic target) rather than silently mixing Pallas kernels with the
+  jnp reference kernels inside one program.  ``use_ref_kernels`` is the
+  engine-side twin: the jnp reference kernels are only ever substituted
+  in the fully-automatic ``interpret=None`` mode.
+* **block normalization** — ``normalize_block`` rounds requested block
+  sizes up to the k-step granule (8) so ``k_step = gcd(block, 8)`` can
+  never silently degrade to a 1-wide scalar-slice ``fori_loop``;
+  ``k_step_for`` raises instead of degrading if handed an
+  un-normalized block.
+* **fused-path switch** — ``fused_enabled`` resolves the per-plan
+  option against the ``REPRO_FUSED`` environment default.
+* **dispatch accounting** — host-side counters
+  (``record_dispatch``/``dispatch_counts``) that the engines bump per
+  emitted kernel launch; benchmark table 15 uses them as the
+  CPU-measurable proxy for the fused path's 3-dispatches→1 reduction.
+
+The kernel modules import this policy lazily (inside their wrapper
+bodies) and this module re-exports the kernels at the bottom, so either
+import order works without a cycle.
 """
-from repro.kernels.coo_spmm import coo_spmm
-from repro.kernels.segment_reduce import segment_reduce
-from repro.kernels.segment_sum import segment_sum
-from repro.kernels.semiring_matmul import semiring_matmul
+from __future__ import annotations
 
-__all__ = ["segment_sum", "segment_reduce", "coo_spmm", "semiring_matmul"]
+import math
+import os
+import threading
+
+import jax
+
+#: granule for the k-slice fori_loop inside segment_reduce /
+#: semiring_matmul / fused min-max hops; blocks are rounded up to a
+#: multiple of this so ``gcd(block, _KSTEP_GRANULE)`` is always exact
+_KSTEP_GRANULE = 8
+
+_TRUTHY = frozenset({"1", "true", "on", "yes"})
+
+
+# ----------------------------------------------------------------------
+# interpret policy
+# ----------------------------------------------------------------------
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel ``interpret`` flag to a concrete bool.
+
+    ``None`` (auto) → interpret on CPU hosts, compiled elsewhere.  An
+    explicit ``False`` on a CPU host degrades to ``True`` — CPU has no
+    Mosaic lowering, and the contract of an explicit flag is "run the
+    Pallas kernel path", never "fall back to something else".
+    """
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    if not interpret and jax.default_backend() == "cpu":
+        return True
+    return bool(interpret)
+
+
+def use_ref_kernels(interpret: bool | None) -> bool:
+    """True when the engines should run jnp reference kernels instead of
+    Pallas.  Only the fully-automatic mode ever substitutes refs: an
+    explicit ``interpret=True``/``False`` pins the Pallas path so a
+    single program can't mix ref and Pallas-interpret kernels."""
+    return interpret is None and jax.default_backend() == "cpu"
+
+
+# ----------------------------------------------------------------------
+# fused-path switch
+# ----------------------------------------------------------------------
+
+
+def fused_enabled(option: bool | None = None) -> bool:
+    """Resolve the fused-hop switch: an explicit plan option wins,
+    otherwise the ``REPRO_FUSED`` environment variable decides."""
+    if option is not None:
+        return bool(option)
+    return os.environ.get("REPRO_FUSED", "").strip().lower() in _TRUTHY
+
+
+# ----------------------------------------------------------------------
+# block normalization (the gcd→1 silent-degradation fix)
+# ----------------------------------------------------------------------
+
+
+def round_up(value: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``value``."""
+    return -(-value // multiple) * multiple
+
+
+def normalize_block(name: str, value: int) -> int:
+    """Validate and round a block size up to the k-step granule.
+
+    Tiling is semantics-free (the wrappers pad inputs to the block
+    grid), so rounding up never changes results — it only prevents
+    ``gcd(block, 8) == 1`` from quietly turning the reduction loop into
+    a per-row scalar slice."""
+    if not isinstance(value, int) or isinstance(value, bool) or value <= 0:
+        raise ValueError(f"{name} must be a positive int, got {value!r}")
+    return round_up(value, _KSTEP_GRANULE)
+
+
+def k_step_for(block: int) -> int:
+    """k-slice step for a normalized block; raises on an un-normalized
+    one instead of silently degrading to a scalar-slice loop."""
+    step = math.gcd(block, _KSTEP_GRANULE)
+    if step != _KSTEP_GRANULE:
+        raise ValueError(
+            f"block size {block} is not a multiple of {_KSTEP_GRANULE}; "
+            "pass it through normalize_block() first"
+        )
+    return step
+
+
+# ----------------------------------------------------------------------
+# dispatch accounting (table 15's currency)
+# ----------------------------------------------------------------------
+
+_dispatch_lock = threading.Lock()
+_dispatch_counts: dict[str, int] = {}
+
+
+def record_dispatch(stage: str, n: int = 1) -> None:
+    """Count ``n`` kernel dispatches attributed to ``stage`` (one of
+    ``gather``/``product``/``scatter``/``fused``)."""
+    with _dispatch_lock:
+        _dispatch_counts[stage] = _dispatch_counts.get(stage, 0) + n
+
+
+def dispatch_counts() -> dict[str, int]:
+    with _dispatch_lock:
+        return dict(_dispatch_counts)
+
+
+def reset_dispatch_counts() -> None:
+    with _dispatch_lock:
+        _dispatch_counts.clear()
+
+
+# re-exports: ops is the stable import surface for all kernels; these
+# live at the bottom so the kernel modules can import the policy
+# functions above from inside their wrapper bodies without a cycle
+from repro.kernels.coo_spmm import coo_spmm  # noqa: E402
+from repro.kernels.fused_hop import fused_hop  # noqa: E402
+from repro.kernels.segment_reduce import segment_reduce  # noqa: E402
+from repro.kernels.segment_sum import segment_sum  # noqa: E402
+from repro.kernels.semiring_matmul import semiring_matmul  # noqa: E402
+
+__all__ = [
+    "coo_spmm",
+    "dispatch_counts",
+    "fused_enabled",
+    "fused_hop",
+    "k_step_for",
+    "normalize_block",
+    "record_dispatch",
+    "reset_dispatch_counts",
+    "resolve_interpret",
+    "round_up",
+    "segment_sum",
+    "segment_reduce",
+    "semiring_matmul",
+    "use_ref_kernels",
+]

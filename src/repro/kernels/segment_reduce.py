@@ -19,13 +19,18 @@ wrapper pads).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _IDENT = {"min": jnp.inf, "max": -jnp.inf}
+
+#: the segment axis writes disjoint output tiles (parallelizable); the
+#: row axis revisits one output tile with a ``@pl.when(rj == 0)`` init +
+#: reduce, so it must be sequential ("arbitrary") — see coo_spmm
+DIM_SEMANTICS = ("parallel", "arbitrary")
 
 
 def _segment_reduce_kernel(
@@ -81,8 +86,11 @@ def segment_reduce(
 
     ids outside [0, num_segments) are dropped, matching
     ``segment_reduce_ref`` for in-range ids."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import ops
+
+    interpret = ops.resolve_interpret(interpret)
+    block_s = ops.normalize_block("block_s", block_s)
+    block_n = ops.normalize_block("block_n", block_n)
     if kind not in _IDENT:
         raise ValueError(f"unknown reduction {kind!r}")
     n, d = data.shape
@@ -95,8 +103,8 @@ def segment_reduce(
     s_total = num_segments + s_pad
     grid = (s_total // block_s, data.shape[0] // block_n)
     # k_step must divide block_n exactly or the fori_loop drops the
-    # trailing rows of every block
-    k_step = math.gcd(block_n, 8)
+    # trailing rows of every block; normalize_block above guarantees it
+    k_step = ops.k_step_for(block_n)
     out = pl.pallas_call(
         functools.partial(
             _segment_reduce_kernel, block_s=block_s, kind=kind, k_step=k_step
@@ -108,6 +116,7 @@ def segment_reduce(
         ],
         out_specs=pl.BlockSpec((block_s, d), lambda si, rj: (si, 0)),
         out_shape=jax.ShapeDtypeStruct((s_total, d), data.dtype),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
     )(segment_ids.astype(jnp.int32), data)
     return out[:num_segments]

@@ -16,6 +16,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: the segment axis writes disjoint output tiles (parallelizable); the
+#: row axis revisits one output tile with a ``@pl.when(rj == 0)`` init +
+#: accumulate, so it must be sequential ("arbitrary") — see coo_spmm
+DIM_SEMANTICS = ("parallel", "arbitrary")
 
 
 def _segment_sum_kernel(ids_ref, data_ref, out_ref, *, block_s: int):
@@ -51,8 +57,11 @@ def segment_sum(
 
     ids outside [0, num_segments) are dropped (matching segment_sum_ref
     only for in-range ids; the ops wrapper guarantees in-range)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import ops
+
+    interpret = ops.resolve_interpret(interpret)
+    block_s = ops.normalize_block("block_s", block_s)
+    block_n = ops.normalize_block("block_n", block_n)
     n, d = data.shape
     n_pad = -n % block_n
     s_pad = -num_segments % block_s
@@ -71,6 +80,7 @@ def segment_sum(
         ],
         out_specs=pl.BlockSpec((block_s, d), lambda si, rj: (si, 0)),
         out_shape=jax.ShapeDtypeStruct((s_total, d), data.dtype),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
     )(segment_ids.astype(jnp.int32), data)
     return out[:num_segments]

@@ -12,13 +12,18 @@ Grid ``(m_tiles, n_tiles, k_tiles)``; C tile accumulates across k.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _IDENT = {"add_mul": 0.0, "max_add": -jnp.inf, "min_add": jnp.inf, "or_and": 0.0}
+
+#: m and n axes write disjoint C tiles (parallelizable); the k axis
+#: revisits one C tile with a ``@pl.when(ki == 0)`` init + accumulate,
+#: so it must be sequential ("arbitrary") — see coo_spmm
+DIM_SEMANTICS = ("parallel", "parallel", "arbitrary")
 
 
 def _semiring_matmul_kernel(a_ref, b_ref, c_ref, *, semiring: str, k_step: int):
@@ -69,8 +74,12 @@ def semiring_matmul(
     interpret: bool | None = None,
 ) -> jax.Array:
     """C = A ⊗ B over the chosen semiring; A (m, k), B (k, n)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import ops
+
+    interpret = ops.resolve_interpret(interpret)
+    block_m = ops.normalize_block("block_m", block_m)
+    block_n = ops.normalize_block("block_n", block_n)
+    block_k = ops.normalize_block("block_k", block_k)
     if semiring not in _IDENT:
         raise ValueError(f"unknown semiring {semiring!r}")
     m, k = a.shape
@@ -88,8 +97,8 @@ def semiring_matmul(
         b = jnp.pad(b, ((0, k_pad), (0, n_pad)), constant_values=pad_fill)
     grid = (a.shape[0] // block_m, b.shape[1] // block_n, a.shape[1] // block_k)
     # k_step must divide block_k exactly or the fori_loop drops the
-    # trailing k-slices of every block
-    k_step = math.gcd(block_k, 8)
+    # trailing k-slices of every block; normalize_block above guarantees it
+    k_step = ops.k_step_for(block_k)
     out = pl.pallas_call(
         functools.partial(_semiring_matmul_kernel, semiring=semiring, k_step=k_step),
         grid=grid,
@@ -99,6 +108,7 @@ def semiring_matmul(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
     )(a, b)
     return out[:m, :n]

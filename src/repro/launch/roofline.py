@@ -121,6 +121,78 @@ def analyze_cell(rec: dict) -> dict | None:
     }
 
 
+# ----------------------------------------------------------------------
+# fused-hop kernel cost model (DESIGN.md §13)
+# ----------------------------------------------------------------------
+
+#: per-core VMEM budget the autotuner keeps a fused-hop cell within
+VMEM_BYTES = 16 * 2**20
+
+
+def fused_hop_vmem_bytes(  # tile-math
+    block_e: int,
+    block_s: int,
+    block_r: int,
+    child_rows: tuple[int, ...],
+    child_widths: tuple[int, ...],
+    width: int,
+    k: int,
+) -> int:
+    """f32 bytes resident in one fused-hop grid cell: the whole child
+    messages (full-array BlockSpecs), the edge tile's key/weight/index
+    columns, the gather selector + per-child gathered tile, the
+    ``(block_e, width·k)`` product, and the output tile."""
+    rows_pad = [max(-(-r // block_r) * block_r, block_r) for r in child_rows]
+    msgs = sum(r * wc * k for r, wc in zip(rows_pad, child_widths))
+    edge_cols = block_e * (2 + len(child_rows) + k)  # keys+w+idx columns
+    gather = block_e * block_r + sum(block_e * wc * k for wc in child_widths)
+    product = block_e * width * k
+    out_tile = block_s * width * k + block_s * block_e  # + scatter selector
+    return 4 * (msgs + edge_cols + gather + product + out_tile)
+
+
+def fused_hop_cost(  # tile-math
+    edges: int,
+    child_rows: tuple[int, ...],
+    child_widths: tuple[int, ...],
+    num_segments: int,
+    k: int = 1,
+    block_e: int = 512,
+    block_s: int = 128,
+    block_r: int = 128,
+) -> dict[str, float]:
+    """Roofline estimate for one fused hop at the given tile config.
+
+    FLOPs per grid cell: the one-hot gather matmuls
+    (``2·block_e·rows_pad_c·width_c·k`` per child — the selector dot
+    spans every padded child row) plus the segment scatter
+    (``2·block_s·block_e·width·k``).  Cells = s_tiles × e_tiles.  HBM
+    bytes: the edge arrays and child messages are re-read once per
+    segment tile (the output tile is resident, the inputs stream), the
+    output is written once.  Seconds = max(flops/PEAK_FLOPS,
+    bytes/HBM_BW) — the standard two-term roofline.
+    """
+    width = 1
+    for wc in child_widths:
+        width *= wc
+    e_tiles = max(-(-edges // block_e), 1)
+    s_tiles = max(-(-num_segments // block_s), 1)
+    rows_pad = [max(-(-r // block_r) * block_r, block_r) for r in child_rows]
+    gather_flops = sum(
+        2.0 * block_e * rp * wc * k for rp, wc in zip(rows_pad, child_widths)
+    )
+    scatter_flops = 2.0 * block_s * block_e * width * k
+    flops = (gather_flops + scatter_flops) * e_tiles * s_tiles
+
+    edge_bytes = 4.0 * block_e * e_tiles * (2 + len(child_rows) + k)
+    msg_bytes = 4.0 * sum(
+        rp * wc * k for rp, wc in zip(rows_pad, child_widths)
+    )
+    hbm = (edge_bytes + msg_bytes) * s_tiles + 4.0 * s_tiles * block_s * width * k
+    seconds = max(flops / PEAK_FLOPS, hbm / HBM_BW)
+    return {"flops": flops, "hbm_bytes": hbm, "seconds": seconds}
+
+
 def markdown_table(cells: list[dict]) -> str:
     rows = [
         "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "

@@ -237,9 +237,13 @@ def execute_split(
     decision: SplitDecision,
     engine,
     channels: tuple[Channel, ...],
+    fused: bool | None = None,
 ) -> list[EngineOutput]:
     """Run the plan once per key range and merge the group partials."""
     attr = decision.attr
+    kwargs = {}
+    if fused is not None and getattr(engine, "supports_fused", False):
+        kwargs["fused"] = fused
     outs: list[EngineOutput] = []
     for (lo, hi), root in zip(decision.ranges, decision.roots):
         enc = csr_restrict(prep, attr, lo, hi)
@@ -254,6 +258,6 @@ def execute_split(
         else:
             _, _, deco = _range_plan(prep, attr, hi - lo)
         prep_s = _split_prepared(prep, attr, lo, hi, deco)
-        outs.extend(engine.run(prep_s, channels, (), None))
+        outs.extend(engine.run(prep_s, channels, (), None, **kwargs))
     merged = _merge_outputs(outs, len(prep.group_attrs), len(channels))
     return [merged]

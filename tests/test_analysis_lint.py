@@ -183,6 +183,35 @@ def test_same_divisor_mod_guard_is_exempt():
     ) == []
 
 
+def test_tile_math_marker_extends_rule_to_host_functions():
+    # host-side tile arithmetic (the autotuner's candidate generation)
+    # has no pallas_call in scope; the # tile-math marker opts it in
+    assert "tile-floordiv" in codes(
+        """
+        def candidates(edges, block):  # tile-math
+            return edges // block
+        """
+    )
+
+
+def test_unmarked_host_function_stays_out_of_scope():
+    assert codes(
+        """
+        def plain_host_math(edges, block):
+            return edges // block
+        """
+    ) == []
+
+
+def test_tile_math_marker_accepts_ceil_div():
+    assert codes(
+        """
+        def candidates(edges, block):  # tile-math
+            return -(-edges // block)
+        """
+    ) == []
+
+
 def test_lint_ok_suppression():
     assert codes(
         """

@@ -325,6 +325,72 @@ def test_sentinel_fires_on_aliasing_hop_key():
 
 
 # ----------------------------------------------------------------------
+# fused-megakernel configs
+# ----------------------------------------------------------------------
+
+
+def _poison_kernel_configs(monkeypatch, **overrides):
+    """Replace the first model-ranked hop config with a broken one."""
+    from repro.kernels import autotune
+
+    real = autotune.plan_kernel_configs
+
+    def fake(prep, k=1):
+        entries = [dict(e) for e in real(prep, k=k)]
+        for key, val in overrides.items():
+            if key.startswith("block_"):
+                entries[0]["config"] = dataclasses.replace(
+                    entries[0]["config"], **{key: val}
+                )
+            else:
+                entries[0][key] = val
+        return entries
+
+    monkeypatch.setattr(autotune, "plan_kernel_configs", fake)
+
+
+def test_kern_fires_on_non_granule_tile(monkeypatch):
+    from repro.analysis.verify import check_kernels
+
+    plan = chain_plan()
+    assert check_kernels(plan) == []  # model-ranked configs are clean
+    _poison_kernel_configs(monkeypatch, block_e=12)  # the math.gcd regression
+    diags = plan.verify(strict=False)
+    assert any(
+        d.code == "V-KERN" and "drop trailing lanes" in d.message
+        for d in diags
+    )
+
+
+def test_kern_fires_on_aliasing_segment_space(monkeypatch):
+    _poison_kernel_configs(monkeypatch, num_segments=2**31)
+    plan = chain_plan()
+    diags = plan.verify(strict=False)
+    assert any(
+        d.code == "V-KERN" and "pad sentinel" in d.message for d in diags
+    )
+
+
+def test_kern_fires_on_integer_accumulator(monkeypatch):
+    _poison_kernel_configs(monkeypatch, acc_dtype="int32")
+    plan = chain_plan()
+    diags = plan.verify(strict=False)
+    assert any(
+        d.code == "V-KERN" and "identities" in d.message for d in diags
+    )
+
+
+class _PlainEngine:
+    name = "plain"  # no supports_fused attribute
+
+
+def test_kern_silent_on_engines_without_fused_kernels():
+    plan = dataclasses.replace(chain_plan(), engine=_PlainEngine())
+    # non-fused engines never reach check_kernels; no V-KERN possible
+    assert not any(d.code == "V-KERN" for d in plan.verify(strict=False))
+
+
+# ----------------------------------------------------------------------
 # accumulator overflow
 # ----------------------------------------------------------------------
 
